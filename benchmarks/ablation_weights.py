@@ -1,0 +1,50 @@
+"""Ablation: reputation-weight vector ξ = (AC, MS, PI) under 30% poisoners.
+
+Covers the paper's design space and its prior-work baselines:
+  (0,1,0) = pure age-of-update selection ([18])
+  (1,0,0) = pure data-quantity/AC selection
+  (0,0,1) = pure interaction-history selection
+  (0.5,0.5,0) = the paper's PI-blind benchmark
+  (0.3,0.5,0.2) = the paper's proposed weights
+
+Claim probed: the PI term (with RONI) is what defends against poisoning —
+ξ-vectors with PI > 0 should dominate PI-blind ones."""
+from __future__ import annotations
+
+import time
+
+from .common import curve, fl_experiment, save_csv
+
+ROUNDS = 16
+WEIGHT_SETS = {
+    "proposed_0.3_0.5_0.2": (0.3, 0.5, 0.2),
+    "benchmark_0.5_0.5_0.0": (0.5, 0.5, 0.0),
+    "aou_only_0_1_0": (0.0, 1.0, 0.0),
+    "ac_only_1_0_0": (1.0, 0.0, 0.0),
+    "pi_only_0_0_1": (0.0, 0.0, 1.0),
+}
+
+
+def run():
+    t0 = time.perf_counter()
+    results = {}
+    for name, w in WEIGHT_SETS.items():
+        use_roni = w[2] > 0 or name.startswith("proposed")
+        accs = []
+        for seed in (7, 23):
+            hist = fl_experiment(seed=seed, dataset="mnist",
+                                 poison_ratio=0.3, weights=w,
+                                 use_roni=use_roni, rounds=ROUNDS)
+            accs.append(curve(hist))
+        results[name] = [sum(col) / len(col) for col in zip(*accs)]
+    rows = [[r] + [round(results[k][r], 4) for k in WEIGHT_SETS]
+            for r in range(ROUNDS)]
+    save_csv("ablation_weights", "round," + ",".join(WEIGHT_SETS), rows)
+    final = {k: max(v[-4:]) for k, v in results.items()}
+    pi_sets = [final["proposed_0.3_0.5_0.2"], final["pi_only_0_0_1"]]
+    blind = [final["benchmark_0.5_0.5_0.0"], final["ac_only_1_0_0"],
+             final["aou_only_0_1_0"]]
+    derived = ";".join(f"{k}={v:.3f}" for k, v in final.items())
+    derived += f";pi_term_helps={max(pi_sets) >= max(blind) - 0.02}"
+    return [("ablation_reputation_weights", (time.perf_counter() - t0) * 1e6,
+             derived)]

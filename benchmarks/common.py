@@ -1,0 +1,82 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.channel import sample_positions
+from repro.core.digital_twin import DTConfig, sample_v_max
+from repro.core.fl_round import FLConfig, FLState, run_training
+from repro.core.reputation import init_reputation
+from repro.core.stackelberg import GameConfig
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_CIFAR, SYNTHETIC_MNIST
+from repro.models.classifier import make_classifier
+
+RESULTS_DIR = "runs/bench"
+
+
+def timed(fn, *args, iters: int = 3, warmup: int = 1):
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def fl_experiment(seed: int, dataset: str = "mnist", scheme: str = "proposed",
+                  poison_ratio: float = 0.0, epsilon: float = 0.0,
+                  weights=None, rounds: int = 20, iid: bool = True,
+                  m: int = 20, cap: int = 128, n_selected: int = 5,
+                  use_roni: bool = True, game: GameConfig | None = None):
+    """Run one FL training curve; returns history (list of per-round dicts)."""
+    spec = SYNTHETIC_MNIST if dataset == "mnist" else SYNTHETIC_CIFAR
+    # Both proxies use the MLP head in the benchmark harness: the phenomena
+    # under test (selection/poisoning/DT-deviation dynamics) are
+    # distribution-level, and XLA-on-CPU convolutions are ~40 s/round —
+    # they would dominate the harness without informing the claims.  The
+    # CNN path stays in the library (models/classifier.py) and is covered
+    # by tests.  CIFAR-proxy difficulty comes from its lower class
+    # separation (DESIGN.md §6).
+    kind = "mlp"
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    lpc = 1 if dataset == "mnist" else 5
+    data = make_federated_data(ks[0], spec, m=m, cap=cap, iid=iid,
+                               labels_per_client=lpc,
+                               poison_ratio=poison_ratio)
+    params, logits_fn = make_classifier(
+        kind, ks[1], in_dim=spec.dim, hidden=64 if dataset == "mnist" else 96)
+    from repro.core.reputation import PROPOSED_WEIGHTS
+    fl = FLConfig(n_selected=n_selected, local_steps=40, server_steps=40,
+                  lr=0.1, epsilon=epsilon, scheme=scheme, roni_threshold=0.02,
+                  weights=weights or PROPOSED_WEIGHTS, use_roni=use_roni)
+    state = FLState(params=params, rep=init_reputation(m),
+                    v_max=sample_v_max(ks[2], m, DTConfig()),
+                    distances=sample_positions(ks[3], m), key=ks[4])
+    state, hist = run_training(state, data, fl, game or GameConfig(),
+                               logits_fn, rounds)
+    return hist
+
+
+def curve(hist, key="val_acc"):
+    return [h[key] for h in hist]
+
+
+def save_csv(name: str, header: str, rows):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.csv")
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path

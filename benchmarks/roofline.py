@@ -1,0 +1,141 @@
+"""Roofline analysis (deliverable g): three terms per (arch × shape) from the
+dry-run artifacts, with the trip-count-corrected HLO walker.
+
+    compute term    = HLO_FLOPs(corrected, per device) / peak_FLOP/s
+    memory term     = HLO_bytes(corrected, per device) / HBM_bw
+    collective term = collective_bytes(per device)     / ICI link_bw
+
+Per-device quantities from the SPMD module are equivalent to the spec's
+global/(chips·bw) form.  MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D
+(inference); the ratio MODEL_FLOPS/HLO_FLOPs measures how much compiled
+compute is "useful" (remat + attention quadratic + dispatch waste).
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh pod] [--json out]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import zstandard as zstd
+
+from repro.analysis.hlo_walk import HloCost
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "runs/dryrun")
+
+
+def load_hlo_cost(arch: str, shape: str, mesh: str):
+    path = os.path.join(RESULTS_DIR, "hlo", f"{arch}_{shape}_{mesh}.hlo.zst")
+    if not os.path.exists(path):
+        return None
+    with open(path, "rb") as f:
+        text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    return HloCost(text).entry_cost()
+
+
+def model_flops_per_device(meta: dict, n_chips: int) -> float:
+    n_active = meta["params_active"]
+    s, b = meta["seq_len"], meta["global_batch"]
+    mode = meta["mode"]
+    if mode == "train":
+        total = 6.0 * n_active * s * b
+    elif mode == "prefill":
+        total = 2.0 * n_active * s * b
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * b
+    return total / n_chips
+
+
+def analyze_combo(result: dict) -> dict | None:
+    if result.get("status") != "ok":
+        return None
+    arch, shape, mesh = result["arch"], result["shape"], result["mesh"]
+    walk = load_hlo_cost(arch, shape, mesh)
+    if walk is None:
+        return None
+    n_chips = result["n_chips"]
+    flops = walk["flops"]
+    hbm = walk["hbm_bytes"]
+    coll = sum(walk["collectives"].values())
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = hbm / HBM_BW
+    t_coll = coll / ICI_BW_PER_LINK
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(result["meta"], n_chips)
+    mem = result["memory"]
+    hbm_resident = (mem.get("argument_size_in_bytes", 0)
+                    + mem.get("temp_size_in_bytes", 0)
+                    + mem.get("output_size_in_bytes", 0)
+                    - mem.get("alias_size_in_bytes", 0))
+    return {
+        "arch": arch, "shape": shape, "mesh": mesh, "n_chips": n_chips,
+        "flops_per_dev": flops, "hbm_bytes_per_dev": hbm,
+        "collective_bytes_per_dev": coll,
+        "collectives_by_type": walk["collectives"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": mf,
+        "useful_compute_ratio": mf / flops if flops else 0.0,
+        "resident_bytes_per_dev": hbm_resident,
+        "step_time_bound_s": max(terms.values()),
+        "raw_cost_analysis_flops": result["cost"]["flops"],
+    }
+
+
+def all_results(mesh: str = "pod"):
+    out = []
+    for fname in sorted(os.listdir(RESULTS_DIR)):
+        if not fname.endswith(f"_{mesh}.json"):
+            continue
+        with open(os.path.join(RESULTS_DIR, fname)) as f:
+            r = json.load(f)
+        a = analyze_combo(r)
+        if a:
+            out.append(a)
+        elif r.get("status") == "skipped":
+            out.append({"arch": r["arch"], "shape": r["shape"],
+                        "mesh": mesh, "skipped": r["reason"]})
+    return out
+
+
+def table(rows) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "useful ratio | resident GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    order = {s: i for i, s in enumerate(SHAPES)}
+    rows = sorted(rows, key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    for r in rows:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skip | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"**{r['dominant']}** | {r['useful_compute_ratio']:.2f} | "
+            f"{r['resident_bytes_per_dev']/2**30:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod")
+    ap.add_argument("--json", default="runs/roofline.json")
+    args = ap.parse_args()
+    rows = all_results(args.mesh)
+    print(table(rows))
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=2)
+    print(f"\nwrote {args.json} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

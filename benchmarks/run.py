@@ -1,0 +1,59 @@
+"""Benchmark harness — one module per paper table/figure + kernel
+micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig4,fig9,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=",".join(SUITES))
+    args = ap.parse_args()
+    wanted = set(args.only.split(","))
+
+    print("name,us_per_call,derived")
+    rows = []
+    for suite in SUITES:
+        if suite not in wanted:
+            continue
+        try:
+            if suite == "fig4":
+                from . import fig4_dinkelbach as mod
+            elif suite == "fig5":
+                from . import fig5_poisoners as mod
+            elif suite == "fig6":
+                from . import fig6_dt_deviation as mod
+            elif suite == "fig78":
+                from . import fig78_schemes as mod
+            elif suite == "fig9":
+                from . import fig9_total_cost as mod
+            elif suite == "ablation":
+                from . import ablation_weights as mod
+            else:
+                from . import kernels_microbench as mod
+            for name, us, derived in mod.run():
+                line = f"{name},{us:.1f},{derived}"
+                print(line, flush=True)
+                rows.append(line)
+        except Exception:  # noqa: BLE001
+            print(f"{suite},NaN,ERROR", flush=True)
+            traceback.print_exc()
+    os.makedirs("runs/bench", exist_ok=True)
+    with open("runs/bench/summary.csv", "w") as f:
+        f.write("name,us_per_call,derived\n")
+        f.write("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""List the largest tensors in a dry-run's saved optimized HLO.
+
+    PYTHONPATH=src python scripts/big_buffers.py nemotron-4-340b train_4k pod [min_mb]
+"""
+import re
+import sys
+from collections import Counter
+
+import zstandard as zstd
+
+DT = {"pred": 1, "s8": 1, "u8": 1, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+      "f32": 4, "s64": 8, "f64": 8}
+
+arch, shape, mesh = sys.argv[1], sys.argv[2], sys.argv[3]
+min_mb = float(sys.argv[4]) if len(sys.argv) > 4 else 256.0
+path = f"runs/dryrun/hlo/{arch}_{shape}_{mesh}.hlo.zst"
+text = zstd.ZstdDecompressor().decompress(open(path, "rb").read()).decode()
+
+pat = re.compile(r"=\s*((?:\([^=]*?\))|(?:\w+\[[\d,]*\]))")
+shape_re = re.compile(r"(\w+)\[([\d,]*)\]")
+op_re = re.compile(r"\]\}?[^=]*?\s([\w\-]+)\(")
+big = Counter()
+for line in text.splitlines():
+    s = line.strip()
+    m = pat.search(s)
+    if not m:
+        continue
+    total = 0
+    for sm in shape_re.finditer(m.group(1)):
+        dt, dims = sm.group(1), sm.group(2)
+        if dt not in DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * DT[dt]
+    if total >= min_mb * 2**20:
+        op = op_re.search(s)
+        meta = re.search(r'op_name="([^"]*)"', s)
+        big[(m.group(1)[:70], op.group(1) if op else "?",
+             (meta.group(1)[:60] if meta else ""))] += 1
+for (shp, op, meta), cnt in big.most_common(30):
+    print(f"{cnt:4d}x {op:22s} {shp:72s} {meta}")

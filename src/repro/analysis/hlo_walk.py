@@ -1,0 +1,229 @@
+"""Trip-count-aware HLO cost walker.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — see EXPERIMENTS.md §Measurement notes), which under-counts the
+layer-group and microbatch ``lax.scan`` loops by their trip counts.  This
+walker parses the optimized post-SPMD HLO, builds the computation call graph,
+and multiplies each while body's costs by its ``known_trip_count``
+backend-config annotation, producing corrected per-device totals:
+
+  * ``flops``            — dot/convolution FLOPs (elementwise excluded; the
+                           models here are matmul-dominated)
+  * ``hbm_bytes``        — Σ over fusions/instructions of operand+result
+                           bytes (a standard HBM-traffic model: each fused
+                           kernel reads its operands and writes its result)
+  * ``collective_bytes`` — per-device operand bytes of all-gather /
+                           all-reduce / reduce-scatter / all-to-all /
+                           collective-permute, by type
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# instruction kinds that move no HBM bytes on their own
+_FREE = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+         "iota", "after-all", "partition-id", "replica-id", "custom-call"}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_list_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    rest: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if line.endswith("{") and "->" in line:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.strip().startswith("ENTRY"):
+                    comps["__entry__"] = cur
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        s = line.strip()
+        if s.startswith("ROOT "):
+            s = s[5:]
+        eq = s.find(" = ")
+        if eq < 0:
+            continue
+        name = s[:eq].strip().lstrip("%")
+        rhs = s[eq + 3:]
+        # rhs: "<type> <op>(<args...>), attrs..."
+        m = re.match(r"((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)", rhs)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        cur.instrs.append(Instr(name, type_str, op, rhs))
+    return comps
+
+
+def _dot_flops(instr: Instr, types: Dict[str, str]) -> int:
+    """2 × prod(result dims) × prod(contracted lhs dims)."""
+    res_dims = _shape_dims(instr.type_str) or []
+    m = re.search(r"\(([^)]*)\)", instr.rest)
+    if not m:
+        return 0
+    operands = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+    lhs = operands[0] if operands else None
+    lhs_type = types.get(lhs, "")
+    lhs_dims = _shape_dims(lhs_type) or []
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.rest)
+    contract = 1
+    if cm and lhs_dims:
+        for d in cm.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                contract *= lhs_dims[int(d)]
+    n = 1
+    for d in res_dims:
+        n *= d
+    return 2 * n * contract
+
+
+def _conv_flops(instr: Instr, types: Dict[str, str]) -> int:
+    res_dims = _shape_dims(instr.type_str) or []
+    m = re.search(r"\(([^)]*)\)", instr.rest)
+    if not m:
+        return 0
+    operands = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+    if len(operands) < 2:
+        return 0
+    k_dims = _shape_dims(types.get(operands[1], "")) or []
+    n = 1
+    for d in res_dims:
+        n *= d
+    kn = 1
+    for d in k_dims[:-1]:
+        kn *= d
+    return 2 * n * kn
+
+
+def _operand_names(instr: Instr) -> List[str]:
+    m = re.search(r"\(([^)]*)\)", instr.rest)
+    if not m:
+        return []
+    return [a.strip().lstrip("%").split(" ")[-1].lstrip("%")
+            for a in m.group(1).split(",") if a.strip()]
+
+
+def _trip_count(instr: Instr) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', instr.rest)
+    return int(m.group(1)) if m else 1
+
+
+def _called(instr: Instr) -> List[str]:
+    out = []
+    for key in ("body", "condition", "to_apply", "calls",
+                "true_computation", "false_computation"):
+        for m in re.finditer(rf"{key}=%?([\w.\-]+)", instr.rest):
+            out.append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.rest)
+    if m:
+        out += [c.strip().lstrip("%") for c in m.group(1).split(",")]
+    return out
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, dict] = {}
+
+    def _comp_types(self, comp: Computation) -> Dict[str, str]:
+        return {i.name: i.type_str for i in comp.instrs}
+
+    def comp_cost(self, name: str, skip_fusion_interior: bool = True) -> dict:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        if comp is None:
+            return {"flops": 0, "hbm_bytes": 0,
+                    "collectives": defaultdict(int)}
+        types = self._comp_types(comp)
+        flops = 0
+        hbm = 0
+        coll: Dict[str, int] = defaultdict(int)
+        self._memo[name] = {"flops": 0, "hbm_bytes": 0, "collectives": coll}
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += _dot_flops(ins, types)
+            elif ins.op == "convolution":
+                flops += _conv_flops(ins, types)
+            base_op = ins.op.replace("-start", "")
+            if base_op in COLLECTIVES:
+                ob = sum(_shape_list_bytes(types.get(o, ""))
+                         for o in _operand_names(ins))
+                coll[base_op] += ob
+            if ins.op not in _FREE and not ins.op.endswith("-done"):
+                hbm += _shape_list_bytes(ins.type_str)
+                hbm += sum(_shape_list_bytes(types.get(o, ""))
+                           for o in _operand_names(ins))
+            # recurse into called computations (fusion interiors excluded
+            # from HBM but dots inside fusions still count as flops)
+            mult = _trip_count(ins) if ins.op == "while" else 1
+            for sub_name in _called(ins):
+                sub = self.comp_cost(sub_name)
+                flops += mult * sub["flops"]
+                hbm += mult * sub["hbm_bytes"] if ins.op != "fusion" else 0
+                for k, v in sub["collectives"].items():
+                    coll[k] += mult * v
+        out = {"flops": flops, "hbm_bytes": hbm, "collectives": dict(coll)}
+        self._memo[name] = out
+        return out
+
+    def entry_cost(self) -> dict:
+        return self.comp_cost(self.comps["__entry__"].name)

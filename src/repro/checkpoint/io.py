@@ -1,0 +1,81 @@
+"""Checkpoint save/restore: pytree → directory of .npy shards + JSON manifest.
+
+No orbax dependency.  Arrays are written host-local (fully addressable view);
+the manifest records the flattened tree structure so restore round-trips
+exactly.  Deliberately simple but real: atomic rename, step retention.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, step: int, keep: int = 3) -> str:
+    """Write ``tree`` under ``path/step_{step:08d}`` atomically."""
+    os.makedirs(path, exist_ok=True)
+    final = os.path.join(path, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=path, prefix=".tmp_")
+    leaves, treedef = _flatten(tree)
+    manifest = {"step": step, "num_leaves": len(leaves),
+                "treedef": str(treedef),
+                "leaves": []}
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        orig_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or orig_dtype == "bfloat16":
+            # numpy can't serialize ml_dtypes (bfloat16 etc.) — upcast to
+            # f32 (exact for bf16); restore re-casts to the reference dtype
+            arr = arr.astype(np.float32)
+        np.save(os.path.join(tmp, f"leaf_{i:05d}.npy"), arr)
+        manifest["leaves"].append({"index": i, "shape": list(arr.shape),
+                                   "dtype": orig_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _retain(path, keep)
+    return final
+
+
+def _retain(path: str, keep: int):
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(path, d))
+
+
+def latest_step(path: str):
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_"))
+    return int(steps[-1].split("_")[1]) if steps else None
+
+
+def restore_checkpoint(path: str, like: Any, step: int | None = None) -> Any:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    d = os.path.join(path, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(like)
+    assert manifest["num_leaves"] == len(leaves), "tree structure mismatch"
+    out = []
+    for i, ref in enumerate(leaves):
+        arr = np.load(os.path.join(d, f"leaf_{i:05d}.npy"))
+        assert list(arr.shape) == list(ref.shape), (i, arr.shape, ref.shape)
+        out.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

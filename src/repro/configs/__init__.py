@@ -1,0 +1,74 @@
+"""Architecture config registry.
+
+Each module defines ``config() -> ModelConfig`` with the exact assigned
+specification (source cited in the module docstring) and the registry maps
+``--arch`` ids to them.  ``smoke_variant`` derives the reduced CPU-testable
+configuration (≤2 pattern repetitions, d_model ≤ 512, ≤4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict
+
+from ..models.config import BlockSpec, ModelConfig
+
+ARCH_IDS = [
+    "mamba2_2p7b", "seamless_m4t_large_v2", "gemma2_9b", "gemma3_27b",
+    "olmoe_1b_7b", "grok_1_314b", "granite_3_8b", "nemotron_4_340b",
+    "internvl2_76b", "zamba2_2p7b",
+]
+
+# public pool ids (dashes) → module names
+ALIASES = {
+    "mamba2-2.7b": "mamba2_2p7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "gemma2-9b": "gemma2_9b",
+    "gemma3-27b": "gemma3_27b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "grok-1-314b": "grok_1_314b",
+    "granite-3-8b": "granite_3_8b",
+    "nemotron-4-340b": "nemotron_4_340b",
+    "internvl2-76b": "internvl2_76b",
+    "zamba2-2.7b": "zamba2_2p7b",
+}
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod_name = ALIASES.get(arch, arch.replace("-", "_").replace(".", "p"))
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 pattern groups, d_model ≤ 512,
+    ≤4 experts — runs a forward/train step on CPU."""
+    kv = 4 if cfg.num_kv_heads >= cfg.num_heads else 2
+    pattern = tuple(BlockSpec(kind=s.kind, window=min(s.window, 8) if s.window else 0)
+                    for s in cfg.pattern)
+    return cfg.replace(
+        num_layers=2 * len(pattern),
+        d_model=256,
+        num_heads=4,
+        num_kv_heads=kv,
+        head_dim=64,
+        d_ff=512 if cfg.d_ff else 0,
+        vocab_size=512,
+        pattern=pattern,
+        num_experts=min(4, cfg.num_experts) if cfg.num_experts else 0,
+        num_experts_per_tok=min(2, cfg.num_experts_per_tok)
+        if cfg.num_experts else 0,
+        ssm_state=16 if cfg.ssm_state else 0,
+        ssm_head_dim=32,
+        ssm_chunk=8,
+        encoder_layers=2 if cfg.encoder_layers else 0,
+        num_patch_tokens=16 if cfg.num_patch_tokens else 0,
+        train_microbatches=1,
+        param_dtype="float32",
+        dtype="float32",
+        remat=False,
+    )

@@ -1,0 +1,25 @@
+"""gemma2-9b [dense] — local+global alternating attention, logit softcaps,
+arXiv:2408.00118.
+
+42L, d_model=3584, 16H (GQA kv=8), head_dim=256, d_ff=14336, vocab=256000.
+Pattern: alternating sliding-window(4096) / global layers; attn softcap 50,
+final-logit softcap 30.
+"""
+from repro.models.config import ATTN, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-9b",
+        family="dense",
+        num_layers=42,
+        d_model=3584,
+        num_heads=16, num_kv_heads=8, head_dim=256,
+        d_ff=14336,
+        vocab_size=256000,
+        pattern=(BlockSpec(kind=ATTN, window=4096), BlockSpec(kind=ATTN)),
+        attn_softcap=50.0,
+        logit_softcap=30.0,
+        tie_embeddings=True,
+        train_microbatches=8,
+    )

@@ -1,0 +1,26 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context,
+hf:google/gemma-3-1b-pt (family card).
+
+62L, d_model=5376, 32H (GQA kv=16), head_dim=128, d_ff=21504, vocab=262144.
+Pattern: 5 sliding-window(1024) layers per global layer; qk-norm (gemma3
+dropped softcaps in favour of qk-norm).  62 = 10×6 + 2 remainder locals.
+"""
+from repro.models.config import ATTN, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    local = BlockSpec(kind=ATTN, window=1024)
+    return ModelConfig(
+        name="gemma3-27b",
+        family="dense",
+        num_layers=62,
+        d_model=5376,
+        num_heads=32, num_kv_heads=16, head_dim=128,
+        d_ff=21504,
+        vocab_size=262144,
+        pattern=(local, local, local, local, local, BlockSpec(kind=ATTN)),
+        qk_norm=True,
+        rope_theta=1_000_000.0,
+        tie_embeddings=True,
+        train_microbatches=16,
+    )

@@ -1,0 +1,32 @@
+"""grok-1-314b [moe] — 8 experts, top-2, hf:xai-org/grok-1.
+
+64L, d_model=6144, 48H (GQA kv=8), head_dim=128, per-expert d_ff=32768,
+vocab=131072.  Attention-logit softcap 30 (grok's tanh logit clamp).
+bf16 storage + bf16 optimizer moments to fit the 16 GB/chip HBM budget.
+"""
+from repro.models.config import MOE, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="grok-1-314b",
+        family="moe",
+        num_layers=64,
+        d_model=6144,
+        num_heads=48, num_kv_heads=8, head_dim=128,
+        d_ff=32768,
+        vocab_size=131072,
+        pattern=(BlockSpec(kind=MOE),),
+        num_experts=8,
+        num_experts_per_tok=2,
+        attn_softcap=30.0,
+        activation="swiglu",      # grok's GeGLU experts (3 matrices → 314B total)
+        tie_embeddings=True,
+        param_dtype="bfloat16",
+        train_microbatches=32,
+        seq_shard_activations=True,
+        grad_accum_dtype="bfloat16",
+        optimizer_lowp_update=True,
+        kv_cache_dtype="int8",   # halves decode KV residency (§Perf)
+        moe_chunk_tokens=16_384,
+    )

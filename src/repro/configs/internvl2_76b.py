@@ -1,0 +1,30 @@
+"""internvl2-76b [vlm] — InternViT + (Llama-3-70B-class) LM backbone,
+arXiv:2404.16821.
+
+LM backbone: 80L, d_model=8192, 64H (GQA kv=8), head_dim=128, d_ff=28672,
+vocab=128256.  The InternViT vision encoder + projector are STUBS per the
+assignment: ``input_specs`` provides 1024 precomputed patch embeddings
+[B, 1024, d_model] prefixed to the text sequence.
+"""
+from repro.models.config import ATTN, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b",
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        num_heads=64, num_kv_heads=8, head_dim=128,
+        d_ff=28672,
+        vocab_size=128256,
+        pattern=(BlockSpec(kind=ATTN),),
+        num_patch_tokens=1024,
+        tie_embeddings=False,
+        param_dtype="bfloat16",
+        train_microbatches=32,
+        seq_shard_activations=True,
+        grad_accum_dtype="bfloat16",
+        optimizer_lowp_update=True,
+        kv_cache_dtype="int8",   # halves decode KV residency (§Perf)
+    )

@@ -1,0 +1,25 @@
+"""mamba2-2.7b [ssm] — SSD (state-space duality), arXiv:2405.21060.
+
+64L, d_model=2560, attention-free, vocab=50280, ssm_state=128.
+d_inner = 2·2560 = 5120, head_dim 64 → 80 SSM heads, ngroups=1.
+"""
+from repro.models.config import MAMBA, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-2.7b",
+        family="ssm",
+        num_layers=64,
+        d_model=2560,
+        num_heads=1, num_kv_heads=1, head_dim=64,   # no attention blocks
+        d_ff=0,
+        vocab_size=50280,
+        pattern=(BlockSpec(kind=MAMBA),),
+        ssm_state=128,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_chunk=128,
+        tie_embeddings=True,
+        train_microbatches=8,
+    )

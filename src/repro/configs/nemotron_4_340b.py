@@ -1,0 +1,28 @@
+"""nemotron-4-340b [dense] — GQA + squared-ReLU MLP, arXiv:2402.16819.
+
+96L, d_model=18432, 96H (GQA kv=8), head_dim=192, d_ff=73728, vocab=256000.
+bf16 storage + bf16 optimizer moments (16 GB/chip budget; DESIGN.md §5);
+aggressive microbatching (global 256 → micro 4).
+"""
+from repro.models.config import ATTN, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-340b",
+        family="dense",
+        num_layers=96,
+        d_model=18432,
+        num_heads=96, num_kv_heads=8, head_dim=192,
+        d_ff=73728,
+        vocab_size=256000,
+        pattern=(BlockSpec(kind=ATTN),),
+        activation="squared_relu",
+        tie_embeddings=False,
+        param_dtype="bfloat16",
+        train_microbatches=64,
+        seq_shard_activations=True,
+        grad_accum_dtype="bfloat16",
+        optimizer_lowp_update=True,
+        kv_cache_dtype="int8",   # halves decode KV residency (§Perf)
+    )

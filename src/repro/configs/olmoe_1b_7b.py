@@ -1,0 +1,25 @@
+"""olmoe-1b-7b [moe] — 64 experts, top-8, arXiv:2409.02060.
+
+16L, d_model=2048, 16H (GQA kv=16), per-expert d_ff=1024, vocab=50304.
+1B active / 7B total parameters.
+"""
+from repro.models.config import MOE, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="olmoe-1b-7b",
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        num_heads=16, num_kv_heads=16, head_dim=128,
+        d_ff=1024,
+        vocab_size=50304,
+        pattern=(BlockSpec(kind=MOE),),
+        num_experts=64,
+        num_experts_per_tok=8,
+        qk_norm=True,
+        tie_embeddings=True,
+        moe_impl="ep",   # shard_map all-to-all expert parallelism (§Perf)
+        train_microbatches=8,
+    )

@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 [audio] — enc-dec multimodal, arXiv:2308.11596.
+
+24L decoder (+24L encoder backbone), d_model=1024, 16H (GQA kv=16),
+d_ff=8192, vocab=256206.  The mel-spectrogram/conv frontend is a STUB per
+the assignment: ``input_specs`` provides precomputed frame embeddings
+[B, seq_len//4, d_model].
+"""
+from repro.models.config import CROSS, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="seamless-m4t-large-v2",
+        family="audio",
+        num_layers=24,
+        d_model=1024,
+        num_heads=16, num_kv_heads=16, head_dim=64,
+        d_ff=8192,
+        vocab_size=256206,
+        pattern=(BlockSpec(kind=CROSS),),
+        activation="gelu",
+        encoder_layers=24,
+        encoder_ratio=4,
+        tie_embeddings=True,
+        train_microbatches=8,
+    )

@@ -1,0 +1,28 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks,
+arXiv:2411.15242.
+
+54L, d_model=2560, 32H (GQA kv=32), d_ff=10240, vocab=32000, ssm_state=64.
+Pattern: 5 Mamba2 blocks + 1 shared attention block (two parameter sets
+alternating across the 9 groups — Zamba2's weight-shared global blocks).
+"""
+from repro.models.config import MAMBA, SHARED_ATTN, BlockSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    m = BlockSpec(kind=MAMBA)
+    return ModelConfig(
+        name="zamba2-2.7b",
+        family="hybrid",
+        num_layers=54,
+        d_model=2560,
+        num_heads=32, num_kv_heads=32, head_dim=80,
+        d_ff=10240,
+        vocab_size=32000,
+        pattern=(m, m, m, m, m, BlockSpec(kind=SHARED_ATTN)),
+        ssm_state=64,
+        ssm_head_dim=64,
+        ssm_expand=2,
+        ssm_chunk=128,
+        tie_embeddings=True,
+        train_microbatches=8,
+    )

@@ -1,0 +1,23 @@
+"""The paper's primary contribution: DT-assisted FL over NOMA with
+Stackelberg-game resource allocation and reputation-based client selection."""
+from .channel import (BANDWIDTH_HZ, noise_power, sample_channel_gains,
+                      sample_positions, sample_round_channels)
+from .dinkelbach import dinkelbach_power, successive_power
+from .fl_round import FLConfig, FLState, run_round, run_training
+from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
+                         init_reputation, select_clients)
+from .reputation import reputation as reputation_score
+from . import reputation  # keep the submodule accessible (not the function)
+from .stackelberg import (Allocation, GameConfig, equilibrium, follower_alpha,
+                          leader_f, leader_v, oma_allocation,
+                          random_allocation, wo_dt_allocation)
+
+__all__ = [
+    "BANDWIDTH_HZ", "noise_power", "sample_channel_gains", "sample_positions",
+    "sample_round_channels", "dinkelbach_power", "successive_power",
+    "FLConfig", "FLState", "run_round", "run_training", "BENCHMARK_WEIGHTS",
+    "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
+    "reputation_score", "select_clients", "Allocation", "GameConfig", "equilibrium",
+    "follower_alpha", "leader_f", "leader_v", "oma_allocation",
+    "random_allocation", "wo_dt_allocation",
+]

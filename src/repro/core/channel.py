@@ -1,0 +1,43 @@
+"""Wireless channel simulation (paper §VI setup).
+
+Clients are dropped uniformly in a disc of radius 500 m around the server;
+channel gain = G0 · d^(−3.76) · |g|² with Rayleigh fading (|g|² ~ Exp(1)),
+carrier 1 GHz, AWGN density −174 dBm/Hz over B = 1 MHz.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# Table I constants
+BANDWIDTH_HZ = 1.0e6
+NOISE_DBM_PER_HZ = -174.0
+PATHLOSS_EXP = 3.76
+REF_GAIN = 1e-3          # −30 dB at 1 m (standard reference-distance gain)
+CELL_RADIUS_M = 500.0
+
+
+def noise_power(bandwidth_hz: float = BANDWIDTH_HZ) -> float:
+    """AWGN power in watts over the given bandwidth."""
+    return 10.0 ** ((NOISE_DBM_PER_HZ - 30.0) / 10.0) * bandwidth_hz
+
+
+def sample_positions(key, m: int, radius: float = CELL_RADIUS_M):
+    """Uniform in the disc; returns distances [m] to the server at the centre."""
+    k1, k2 = jax.random.split(key)
+    r = radius * jnp.sqrt(jax.random.uniform(k1, (m,)))
+    return jnp.maximum(r, 1.0)
+
+
+def sample_channel_gains(key, distances, pathloss_exp: float = PATHLOSS_EXP,
+                         ref_gain: float = REF_GAIN):
+    """|h|² per client: pathloss × Rayleigh power fading."""
+    fading = jax.random.exponential(key, distances.shape)
+    return ref_gain * distances ** (-pathloss_exp) * fading
+
+
+def sample_round_channels(key, distances):
+    """Fresh fading realization each FL round (block-fading model)."""
+    return sample_channel_gains(key, distances)

@@ -1,0 +1,48 @@
+"""Digital-twin network state (paper §II).
+
+DT_n = {w_n, D̂_n}: the server-side twin of client n holds the client's model
+parameters and an *estimate* of the client's insensitive data.  The estimated
+size obeys D̂_n = v_n·D_n + ε; mapped feature values carry a deviation noise
+ε·u, u ~ U(−1, 1) (Fig. 6 protocol), modelling imperfect real-time mapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DTConfig:
+    epsilon: float = 0.0        # mapping deviation magnitude
+    v_max_low: float = 0.3      # per-client max insensitive fraction range
+    v_max_high: float = 0.8
+
+
+def sample_v_max(key, m: int, cfg: DTConfig):
+    return cfg.v_max_low + jax.random.uniform(key, (m,)) * (
+        cfg.v_max_high - cfg.v_max_low)
+
+
+def mapped_sizes(v, d_sizes, epsilon: float):
+    """D̂_n = v_n·D_n + ε (sample-count estimate)."""
+    return v * d_sizes + epsilon
+
+
+def dt_feature_noise(key, x, epsilon: float):
+    """Apply the Fig.-6 deviation: x̂ = x·(1 + ε·u), u ~ U(−1,1) per element."""
+    if epsilon <= 0.0:
+        return x
+    u = jax.random.uniform(key, x.shape, minval=-1.0, maxval=1.0)
+    return x * (1.0 + epsilon * u)
+
+
+def split_mapping_mask(key, counts_mask, v):
+    """Per-sample Bernoulli(v_n) mask: True = sample mapped to the DT.
+
+    counts_mask: [N, cap] validity mask of per-client sample slots.
+    v:           [N] mapping ratios.
+    """
+    u = jax.random.uniform(key, counts_mask.shape)
+    return (u < v[:, None]) & counts_mask

@@ -1,0 +1,227 @@
+"""One round of DT-assisted federated learning over NOMA (paper Fig. 1).
+
+Round pipeline (§II–§V):
+  1. reputation-based selection of N of M clients            (§III)
+  2. fresh block-fading channel realization, SIC ordering    (§II-C)
+  3. Stackelberg allocation (v*, f*, p*, α*) or baseline     (§IV–V)
+  4. DT data split: Bernoulli(v_n) per sample → server-mapped (with ε
+     feature deviation) vs local                             (§II)
+  5. local SGD on clients (poisoners train on flipped labels) (Eq. 2)
+     + server/DT SGD on the union of mapped data
+  6. deadline check: clients with t_cmp + t_com > T_max straggle and
+     drop out (the mechanism DT/NOMA alleviate)
+  7. RONI validation → PI/NI bookkeeping, exclusion          (§III-3)
+  8. DT-aware aggregation, Eq. (3)
+  9. staleness update, Eq. (13)
+
+Schemes: "proposed" (DT+NOMA), "wo_dt" (v≡0), "oma", "ideal" (no resource
+constraints), matching §VI-C benchmarks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..data.federated import FedData
+from . import reputation as rep
+from .aggregation import dt_aggregate, fedavg
+from .digital_twin import dt_feature_noise, split_mapping_mask
+from .roni import roni_filter
+from .stackelberg import (Allocation, GameConfig, equilibrium, oma_allocation,
+                          random_allocation, wo_dt_allocation)
+from .channel import sample_round_channels
+
+
+@dataclass(frozen=True)
+class FLConfig:
+    n_selected: int = 5
+    local_steps: int = 20
+    server_steps: int = 20
+    lr: float = 0.05
+    epsilon: float = 0.0            # DT mapping deviation
+    roni_threshold: float = 0.02
+    weights: Tuple[float, float, float] = rep.PROPOSED_WEIGHTS
+    scheme: str = "proposed"        # proposed | wo_dt | oma | ideal | random
+    use_roni: bool = True
+    samples_per_unit: float = 1.0   # D_n (samples) → data units for latency
+
+
+@dataclass
+class FLState:
+    params: dict
+    rep: rep.ReputationState
+    v_max: jax.Array        # [M]
+    distances: jax.Array    # [M]
+    key: jax.Array
+    round: int = 0
+
+
+# ---------------------------------------------------------------------------
+# local / server SGD
+# ---------------------------------------------------------------------------
+def masked_loss(logits_fn, p, x, y, w):
+    logits = logits_fn(p, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+@partial(jax.jit, static_argnames=("logits_fn", "steps"))
+def sgd_train(logits_fn, params, x, y, w, steps: int, lr: float):
+    """Full-batch SGD (Eq. 2) for ``steps`` steps with per-sample weights.
+
+    jit-cached on (logits_fn, steps) — an eager ``lax.scan`` here would
+    retrace (and recompile the conv backward) every FL round."""
+    def step(p, _):
+        g = jax.grad(partial(masked_loss, logits_fn))(p, x, y, w)
+        return jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g), None
+
+    params, _ = jax.lax.scan(step, params, None, length=steps)
+    return params
+
+
+@partial(jax.jit, static_argnames=("logits_fn", "steps"))
+def local_train_all(logits_fn, params, x, y, w, steps, lr):
+    """vmap local SGD over the selected clients. x: [N, cap, dim]."""
+    return jax.vmap(lambda xi, yi, wi: sgd_train(logits_fn, params, xi, yi,
+                                                 wi, steps, lr))(x, y, w)
+
+
+@partial(jax.jit, static_argnames=("logits_fn",))
+def _val_acc(logits_fn, x_val, y_val, params):
+    logits = logits_fn(params, x_val)
+    return jnp.mean((jnp.argmax(logits, -1) == y_val).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# round
+# ---------------------------------------------------------------------------
+def allocate(scheme: str, game_cfg: GameConfig, key, h2_sorted, d_units,
+             v_max_sel) -> Allocation:
+    if scheme in ("proposed", "ideal"):
+        return equilibrium(game_cfg, h2_sorted, d_units, v_max_sel)
+    if scheme == "wo_dt":
+        return wo_dt_allocation(game_cfg, h2_sorted, d_units)
+    if scheme == "oma":
+        return oma_allocation(game_cfg, h2_sorted, d_units, v_max_sel)
+    if scheme == "random":
+        return random_allocation(game_cfg, key, h2_sorted, d_units, v_max_sel)
+    raise ValueError(scheme)
+
+
+def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
+              logits_fn: Callable) -> Tuple[FLState, Dict]:
+    m = data.num_clients
+    key, k_ch, k_map, k_dt, k_alloc = jax.random.split(state.key, 5)
+
+    # 1. selection
+    sel, z = rep.select_clients(state.rep, data.sizes, fl.n_selected,
+                                fl.epsilon, fl.weights)
+    sel_mask = jnp.zeros((m,), bool).at[sel].set(True)
+
+    # 2. channel + SIC order (descending gain among the selected)
+    h2 = sample_round_channels(k_ch, state.distances)[sel]
+    order = jnp.argsort(-h2)
+    sel_sorted = sel[order]
+    h2_sorted = h2[order]
+
+    # 3. allocation
+    d_units = data.sizes[sel_sorted] * fl.samples_per_unit
+    v_max_sel = state.v_max[sel_sorted]
+    alloc = allocate(fl.scheme, game, k_alloc, h2_sorted, d_units, v_max_sel)
+    v = alloc.v if fl.scheme != "ideal" else jnp.zeros_like(alloc.v)
+
+    # 4. DT split of the selected clients' data
+    xs, ys_true = data.x[sel_sorted], data.y[sel_sorted]
+    ys_train = data.y_train[sel_sorted]
+    msk = data.mask[sel_sorted]
+    map_mask = split_mapping_mask(k_map, msk, v)      # True = mapped to DT
+    if fl.scheme == "ideal":
+        map_mask = jnp.zeros_like(map_mask)
+    local_w = (msk & ~map_mask).astype(jnp.float32)
+
+    # 5a. local SGD (poisoners flip labels locally)
+    client_params = local_train_all(logits_fn, state.params, xs, ys_train,
+                                    local_w, fl.local_steps, fl.lr)
+    # 5b. server/DT SGD on mapped data (ε feature deviation).  The twin
+    # mirrors the client's data AS-IS — a poisoner's mapped samples carry
+    # the flipped labels too (DT offers no anti-poison oracle; DESIGN.md §8)
+    n, cap, dim = xs.shape
+    x_dt = dt_feature_noise(k_dt, xs, fl.epsilon).reshape(n * cap, dim)
+    server_params = sgd_train(logits_fn, state.params, x_dt,
+                              ys_train.reshape(-1),
+                              map_mask.reshape(-1).astype(jnp.float32),
+                              fl.server_steps, fl.lr)
+
+    # 6. straggler deadline check (tolerance: the leader schedules
+    # deadline-EXACT finishes, so `<=` would coin-flip on float error)
+    if fl.scheme == "ideal":
+        meets = jnp.ones((fl.n_selected,), bool)
+    else:
+        meets = (alloc.t_cmp + alloc.t_com) <= game.t_max * 1.001
+
+    # 7. RONI
+    val_acc = partial(_val_acc, logits_fn, data.x_val, data.y_val)
+    if fl.use_roni:
+        # per-update RONI against the pre-round global model (Biscotti [31]);
+        # the DT/server update is validated the same way — the twin mirrors
+        # poisoned mapped data too
+        positive, _, _ = roni_filter(client_params, state.params,
+                                     d_units, v, fl.epsilon, logits_fn,
+                                     data.x_val, data.y_val,
+                                     fl.roni_threshold)
+        server_ok = _val_acc(logits_fn, data.x_val, data.y_val,
+                             state.params) - val_acc(server_params) \
+            <= fl.roni_threshold
+    else:
+        positive = jnp.ones((fl.n_selected,), bool)
+        server_ok = jnp.asarray(True)
+    include = positive & meets
+
+    # 8. aggregation (Eq. 3); ideal uses plain FedAvg on full local data.
+    # If RONI rejected EVERYTHING this round, keep the previous global model
+    # (an empty aggregate would zero the parameters).
+    any_included = bool(jnp.any(include)) or (fl.scheme != "ideal"
+                                              and bool(server_ok))
+    if not any_included:
+        new_params = state.params
+    elif fl.scheme == "ideal":
+        new_params = fedavg(client_params, d_units, include_mask=include)
+    else:
+        new_params = dt_aggregate(client_params, server_params, d_units, v,
+                                  fl.epsilon, include_mask=include,
+                                  server_include=server_ok)
+
+    # 9. reputation bookkeeping
+    new_rep = rep.update_interactions(state.rep, sel_sorted, positive)
+    new_rep = rep.update_staleness(new_rep, sel_mask)
+
+    metrics = {
+        "round": state.round,
+        "selected": sel_sorted,
+        "val_acc": float(val_acc(new_params)),
+        "latency": float(alloc.t_total),
+        "energy": float(alloc.energy),
+        "total_cost": float(alloc.t_total + alloc.energy),
+        "n_excluded_roni": int(jnp.sum(~positive)),
+        "n_stragglers": int(jnp.sum(~meets)),
+        "n_poisoned_selected": int(jnp.sum(data.poisoned[sel_sorted])),
+        "mean_v": float(jnp.mean(v)),
+    }
+    new_state = FLState(params=new_params, rep=new_rep, v_max=state.v_max,
+                        distances=state.distances, key=key,
+                        round=state.round + 1)
+    return new_state, metrics
+
+
+def run_training(state: FLState, data: FedData, fl: FLConfig,
+                 game: GameConfig, logits_fn: Callable, rounds: int):
+    history = []
+    for _ in range(rounds):
+        state, metrics = run_round(state, data, fl, game, logits_fn)
+        history.append(metrics)
+    return state, history

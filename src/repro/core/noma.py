@@ -1,0 +1,63 @@
+"""Uplink NOMA transmission model (paper §II-C) + OMA baseline.
+
+All rate functions take channel power gains ``h2`` sorted in DESCENDING
+order — the paper's SIC decoding order (client 1 decoded first, suffering
+interference from all later-decoded clients; client N decoded last,
+interference-free; Eq. 9).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .channel import BANDWIDTH_HZ, noise_power
+
+
+def sic_order(h2):
+    """Indices sorting channel gains in descending order (decode order)."""
+    return jnp.argsort(-h2)
+
+
+def noma_rates(p, h2_sorted, bandwidth: float = BANDWIDTH_HZ,
+               sigma2: float | None = None):
+    """Achievable rates (bit/s) under SIC, Eq. (9).
+
+    p, h2_sorted: [N] aligned with the descending-gain decode order.
+    Interference on client n = sum_{j>n} p_j |h_j|².
+    """
+    if sigma2 is None:
+        sigma2 = noise_power(bandwidth)
+    rx = p * h2_sorted
+    # reverse-exclusive cumulative sum: interference from later-decoded clients
+    intf = jnp.flip(jnp.cumsum(jnp.flip(rx))) - rx
+    sinr = rx / (intf + sigma2)
+    return bandwidth * jnp.log2(1.0 + sinr)
+
+
+def sum_capacity(p, h2, bandwidth: float = BANDWIDTH_HZ,
+                 sigma2: float | None = None):
+    """MAC sum capacity B·log2(1 + Σ p|h|²/σ²) — SIC achieves it exactly."""
+    if sigma2 is None:
+        sigma2 = noise_power(bandwidth)
+    return bandwidth * jnp.log2(1.0 + jnp.sum(p * h2) / sigma2)
+
+
+def oma_rates(p, h2, bandwidth: float = BANDWIDTH_HZ,
+              sigma2_full: float | None = None):
+    """Orthogonal baseline: equal bandwidth split B/N, no interference."""
+    n = h2.shape[0]
+    bw = bandwidth / n
+    if sigma2_full is None:
+        sigma2_full = noise_power(bandwidth)
+    sigma2 = sigma2_full / n           # noise scales with sub-band width
+    return bw * jnp.log2(1.0 + p * h2 / sigma2)
+
+
+def tx_latency(d_bits, rates):
+    """Eq. (10)."""
+    return d_bits / jnp.maximum(rates, 1e-9)
+
+
+def tx_energy(p, t_com):
+    """Eq. (11)."""
+    return p * t_com

@@ -1,0 +1,80 @@
+"""Reputation-based client selection (paper §III).
+
+Z_n = ξ1·AC_n + ξ2·MS̄_n + ξ3·PI_n   (Eq. 16), top-N selected each round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# paper §VI weights
+PROPOSED_WEIGHTS = (0.3, 0.5, 0.2)    # AC, MS, PI
+BENCHMARK_WEIGHTS = (0.5, 0.5, 0.0)   # AC+MS only (PI-blind baseline)
+
+
+@dataclass
+class ReputationState:
+    """Per-client reputation bookkeeping (all [M] arrays)."""
+    ms: jax.Array         # model staleness counters (Eq. 13)
+    pi_count: jax.Array   # I_n^PI
+    ni_count: jax.Array   # I_n^NI
+
+
+def init_reputation(m: int) -> ReputationState:
+    return ReputationState(ms=jnp.ones((m,)),
+                           pi_count=jnp.ones((m,)),   # optimistic prior: 1 PI
+                           ni_count=jnp.zeros((m,)))
+
+
+def accuracy_contribution(d_sizes, epsilon: float = 0.0,
+                          w1: float = 1.0, w2: float = 1.0,
+                          w3: float = 1.0 / 2000.0):
+    """Weibull AC model, Eq. (12): increasing & concave in data size."""
+    return w1 - w2 * jnp.exp(-w3 * (d_sizes + epsilon))
+
+
+def normalized_staleness(ms):
+    """Eq. (14)."""
+    return ms / jnp.maximum(jnp.sum(ms), 1e-12)
+
+
+def positive_interaction(state: ReputationState):
+    """Eq. (15)."""
+    tot = state.pi_count + state.ni_count
+    return state.pi_count / jnp.maximum(tot, 1e-12)
+
+
+def reputation(state: ReputationState, d_sizes, epsilon: float = 0.0,
+               weights: Tuple[float, float, float] = PROPOSED_WEIGHTS):
+    """Eq. (16): Z over all M clients."""
+    xi1, xi2, xi3 = weights
+    return (xi1 * accuracy_contribution(d_sizes, epsilon)
+            + xi2 * normalized_staleness(state.ms)
+            + xi3 * positive_interaction(state))
+
+
+def select_clients(state: ReputationState, d_sizes, n: int,
+                   epsilon: float = 0.0,
+                   weights: Tuple[float, float, float] = PROPOSED_WEIGHTS):
+    """Top-N by reputation (descending). Returns indices [n]."""
+    z = reputation(state, d_sizes, epsilon, weights)
+    return jnp.argsort(-z)[:n], z
+
+
+def update_staleness(state: ReputationState, selected_mask) -> ReputationState:
+    """Eq. (13): reset selected clients to 1, increment the rest."""
+    ms = jnp.where(selected_mask, 1.0, state.ms + 1.0)
+    return ReputationState(ms=ms, pi_count=state.pi_count,
+                           ni_count=state.ni_count)
+
+
+def update_interactions(state: ReputationState, selected_idx,
+                        positive_mask) -> ReputationState:
+    """Record RONI verdicts for the selected clients."""
+    pi = state.pi_count.at[selected_idx].add(positive_mask.astype(jnp.float32))
+    ni = state.ni_count.at[selected_idx].add(
+        (~positive_mask).astype(jnp.float32))
+    return ReputationState(ms=state.ms, pi_count=pi, ni_count=ni)

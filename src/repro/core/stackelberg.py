@@ -1,0 +1,281 @@
+"""Stackelberg game between clients (leader, minimize energy E) and the
+server (follower, minimize latency T) — paper §IV–V.
+
+Closed-form structure used by ``equilibrium`` (Algorithm 2):
+
+  follower (Theorem 1):  equal DT finish times t_1^S = … = t_N^S = t^S.
+      case 1 (server slack):   α_n* = c_n·D̂_n / (t_total·f_S)      (Eq. 26)
+      case 2 (server saturated): α_n* = c_n·D̂_n / Σ_m c_m·D̂_m      (Eq. 29)
+
+  leader, decomposed (§V-B):
+      v_n* = v_n_max                                               (§V-B-1)
+      f_n* = max(f̃_n, f_min),  f̃_n = (1−v_n)·c_n·D_n / A_n        (§V-B-2)
+      p_n* via successive Dinkelbach                               (§V-B-3)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import noma
+from .channel import BANDWIDTH_HZ, noise_power
+from .dinkelbach import successive_power
+
+TAU = 2e-28  # effective capacitance coefficient (Table I / [22])
+
+
+@dataclass(frozen=True)
+class GameConfig:
+    """Table I simulation parameters."""
+    bandwidth: float = BANDWIDTH_HZ
+    sigma2: float = field(default_factory=noise_power)
+    p_min: float = 0.01
+    p_max: float = 0.10
+    f_min: float = 1.0e9
+    f_max: float = 10.0e9
+    f_server: float = 100.0e9
+    t_max: float = 10.0
+    cycles_per_sample: float = 1.0e7          # c_n
+    model_bits: float = 1.0e6                 # d_n = 1 Mbit
+    tau: float = TAU
+    dinkelbach_inner: str = "projected"
+
+
+# ---------------------------------------------------------------------------
+# per-term physics (paper Eqs. 5–7, 10–11)
+# ---------------------------------------------------------------------------
+def local_compute_latency(c, v, D, f):
+    return c * (1.0 - v) * D / f                                    # Eq. (5)
+
+
+def local_compute_energy(c, v, D, f, tau: float = TAU):
+    return 0.5 * tau * c * (1.0 - v) * D * f ** 2                   # Eq. (6)
+
+
+def dt_compute_latency(c, d_hat, alpha, f_server):
+    return c * d_hat / (jnp.maximum(alpha, 1e-12) * f_server)       # Eq. (7)
+
+
+# ---------------------------------------------------------------------------
+# follower: Theorem 1
+# ---------------------------------------------------------------------------
+def follower_alpha(c, d_hat, t_total, f_server) -> Tuple[jax.Array, jax.Array]:
+    """Optimal DT frequency shares.  Returns (alpha [N], t_S scalar)."""
+    load = c * d_hat                                # CPU cycles per client
+    alpha_case1 = load / (t_total * f_server)       # Eq. (26)
+    saturated = jnp.sum(alpha_case1) > 1.0
+    alpha_case2 = load / jnp.maximum(jnp.sum(load), 1e-12)   # Eq. (29)
+    alpha = jnp.where(saturated, alpha_case2, alpha_case1)
+    t_s = jnp.where(saturated, jnp.sum(load) / f_server, t_total)
+    return alpha, t_s
+
+
+# ---------------------------------------------------------------------------
+# leader closed forms
+# ---------------------------------------------------------------------------
+def leader_v(v_max):
+    """§V-B-1: map the maximum insensitive fraction."""
+    return v_max
+
+
+def leader_f(c, v, D, a_n, f_min, f_max):
+    """§V-B-2: run exactly at the deadline, floor at f_min."""
+    f_tilde = c * (1.0 - v) * D / jnp.maximum(a_n, 1e-9)
+    return jnp.clip(jnp.maximum(f_tilde, f_min), f_min, f_max)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: joint equilibrium
+# ---------------------------------------------------------------------------
+@dataclass
+class Allocation:
+    v: jax.Array
+    f: jax.Array
+    p: jax.Array
+    alpha: jax.Array
+    rates: jax.Array
+    q: jax.Array           # per-client Dinkelbach optima (rate per energy)
+    t_cmp: jax.Array
+    t_com: jax.Array
+    t_dt: jax.Array
+    t_total: jax.Array     # scalar round latency T (Eq. 17)
+    energy: jax.Array      # scalar total energy E (Eq. 18)
+    e_cmp: jax.Array
+    e_com: jax.Array
+    iterations: int = 0
+
+
+def round_metrics(cfg: GameConfig, D, v, f, p, h2_sorted):
+    rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+    t_com = noma.tx_latency(cfg.model_bits, rates)
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
+    e_com = noma.tx_energy(p, t_com)
+    return rates, t_cmp, t_com, e_cmp, e_com
+
+
+def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
+                max_iter: int = 20, tol: float = 1e-6) -> Allocation:
+    """Algorithm 2 — alternate leader/follower best responses to the
+    Stackelberg equilibrium.  Inputs sorted by descending channel gain.
+
+    h2_sorted : [N] channel power gains (SIC order)
+    D         : [N] client data sizes (samples)
+    v_max     : [N] max insensitive-data fractions
+    """
+    n = h2_sorted.shape[0]
+    v = leader_v(jnp.broadcast_to(v_max, (n,)))
+    f = jnp.full((n,), cfg.f_max)
+    p = jnp.full((n,), cfg.p_max)
+    d_hat = v * D + epsilon                       # DT-mapped data size
+
+    prev_e = jnp.inf
+    it = 0
+    q = jnp.zeros((n,))
+    best = None   # best-iterate safeguard: Alg-2 alternation is not
+    #               guaranteed monotone near infeasible channel draws, so we
+    #               return the lowest-energy (deadline-feasible-first) iterate
+    for it in range(1, max_iter + 1):
+        # leader: power via successive Dinkelbach given current compute times
+        t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+        g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
+        p, q = successive_power(h2_sorted, cfg.model_bits, g_n, cfg.bandwidth,
+                                cfg.sigma2, cfg.p_min, cfg.p_max,
+                                inner=cfg.dinkelbach_inner)
+        rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+        t_com = noma.tx_latency(cfg.model_bits, rates)
+        # leader: frequency runs exactly to the deadline
+        a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
+        f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
+        rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
+                                                          h2_sorted)
+        e_total = jnp.sum(e_cmp + e_com)
+        feasible = bool(jnp.max(t_cmp + t_com) <= cfg.t_max + 1e-6)
+        cand = (not feasible, float(e_total), (v, f, p, q))
+        if best is None or cand[:2] < best[:2]:
+            best = cand
+        if jnp.abs(prev_e - e_total) < tol * jnp.maximum(e_total, 1e-12):
+            break
+        prev_e = e_total
+    v, f, p, q = best[2]
+    rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
+                                                      h2_sorted)
+
+    # follower best response to the leader's final strategy
+    t_total_n = t_cmp + t_com
+    t_total = jnp.max(t_total_n)
+    alpha, t_s = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
+                                cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha,
+                              cfg.f_server)
+    latency = jnp.maximum(t_total, jnp.max(t_dt))          # Eq. (17)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
+                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
+                      t_total=latency, energy=jnp.sum(e_cmp + e_com),
+                      e_cmp=e_cmp, e_com=e_com, iterations=it)
+
+
+# ---------------------------------------------------------------------------
+# baselines for Fig. 9
+# ---------------------------------------------------------------------------
+def random_allocation(cfg: GameConfig, key, h2_sorted, D, v_max,
+                      epsilon: float = 0.0) -> Allocation:
+    """Random resource allocation baseline (same selection, random p/f/v)."""
+    n = h2_sorted.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = jax.random.uniform(k1, (n,)) * v_max
+    f = cfg.f_min + jax.random.uniform(k2, (n,)) * (cfg.f_max - cfg.f_min)
+    p = cfg.p_min + jax.random.uniform(k3, (n,)) * (cfg.p_max - cfg.p_min)
+    d_hat = v * D + epsilon
+    rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p, h2_sorted)
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates,
+                      q=jnp.zeros((n,)), t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
+                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+
+
+def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
+                   epsilon: float = 0.0) -> Allocation:
+    """OMA baseline (default): FDMA — each client gets a B/N sub-band.
+
+    Bandwidth-limited: at the paper's operating load (d_n ≥ 1 Mbit) the B/N
+    sub-bands force long transmissions / higher power, reproducing the
+    Fig. 9 OMA penalty.  (At very light load OMA is within ~2% of NOMA —
+    regime note in EXPERIMENTS.md §Paper-validation.)"""
+    n = h2_sorted.shape[0]
+    v = leader_v(jnp.broadcast_to(v_max, (n,)))
+    f = jnp.full((n,), cfg.f_max)
+    d_hat = v * D + epsilon
+    bw, s2 = cfg.bandwidth / n, cfg.sigma2 / n
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)
+    from .dinkelbach import dinkelbach_power
+    def solve(h2_n, g_nn):
+        p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn, h2_n / s2, bw,
+                                       cfg.p_min, cfg.p_max,
+                                       inner=cfg.dinkelbach_inner)
+        return p_n, q_n
+    p, q = jax.vmap(solve)(h2_sorted, g_n)
+    rates = noma.oma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+    t_com = noma.tx_latency(cfg.model_bits, rates)
+    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
+    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
+    e_com = noma.tx_energy(p, t_com)
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
+                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
+                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+
+
+def oma_tdma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
+                        epsilon: float = 0.0) -> Allocation:
+    """OMA variant: TDMA — sequential full-band slots (round latency Σ t_n,
+    the paper's "insufficient clients per round" mechanism)."""
+    n = h2_sorted.shape[0]
+    v = leader_v(jnp.broadcast_to(v_max, (n,)))
+    f = jnp.full((n,), cfg.f_max)
+    d_hat = v * D + epsilon
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    # per-client slot budget: (Tmax − t_cmp)/N
+    g_n = jnp.maximum((cfg.t_max - t_cmp) / n, 1e-3)
+    from .dinkelbach import dinkelbach_power
+    def solve(h2_n, g_nn):
+        p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn,
+                                       h2_n / cfg.sigma2, cfg.bandwidth,
+                                       cfg.p_min, cfg.p_max,
+                                       inner=cfg.dinkelbach_inner)
+        return p_n, q_n
+    p, q = jax.vmap(solve)(h2_sorted, g_n)
+    rates = cfg.bandwidth * jnp.log2(1.0 + p * h2_sorted / cfg.sigma2)
+    t_own = noma.tx_latency(cfg.model_bits, rates)     # own-slot airtime
+    t_com = jnp.sum(t_own) * jnp.ones_like(t_own)      # sequential round time
+    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
+    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
+    e_com = noma.tx_energy(p, t_own)                   # energy over own slot
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
+                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
+                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+
+
+def wo_dt_allocation(cfg: GameConfig, h2_sorted, D) -> Allocation:
+    """W/O-DT baseline: v ≡ 0, all training on-client (straggler-exposed)."""
+    n = h2_sorted.shape[0]
+    zero_vmax = jnp.zeros((n,))
+    return equilibrium(cfg, h2_sorted, D, zero_vmax, epsilon=0.0)

@@ -1,0 +1,71 @@
+"""Federated data partitioning: IID / non-IID splits + label-flip poisoning
+(paper §VI protocol).
+
+IID    : labels identically distributed across clients, sizes vary.
+non-IID: each client holds ``labels_per_client`` classes (paper: 1 for MNIST,
+         5 for CIFAR-10).
+Poison : a fraction of clients flip labels y → (9 − y) on their LOCAL
+         training data (attack on model updates; the DT-mapped copies carry
+         true labels, since DT mapping reflects raw insensitive data).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .synthetic import NUM_CLASSES, ImageProxySpec, class_means
+
+
+@dataclass
+class FedData:
+    x: jax.Array            # [M, cap, dim]
+    y: jax.Array            # [M, cap] true labels
+    y_train: jax.Array      # [M, cap] labels used for local training (may be flipped)
+    mask: jax.Array         # [M, cap] bool — valid sample slots
+    sizes: jax.Array        # [M] float — D_n
+    poisoned: jax.Array     # [M] bool
+    x_val: jax.Array        # [V, dim] clean validation set (server-held)
+    y_val: jax.Array        # [V]
+
+    @property
+    def num_clients(self) -> int:
+        return self.x.shape[0]
+
+
+def make_federated_data(key, spec: ImageProxySpec, m: int = 20,
+                        cap: int = 256, min_frac: float = 0.4,
+                        iid: bool = True, labels_per_client: int = 1,
+                        poison_ratio: float = 0.0, val_size: int = 512) -> FedData:
+    ks = jax.random.split(key, 8)
+    mu = class_means(ks[0], spec)
+
+    sizes = (min_frac + (1 - min_frac) * jax.random.uniform(ks[1], (m,)))
+    sizes = jnp.floor(sizes * cap).astype(jnp.int32)
+    slot = jnp.arange(cap)[None, :]
+    mask = slot < sizes[:, None]
+
+    if iid:
+        y = jax.random.randint(ks[2], (m, cap), 0, NUM_CLASSES)
+    else:
+        # each client draws labels from its own small class subset
+        base = jax.random.randint(ks[2], (m, labels_per_client), 0, NUM_CLASSES)
+        pick = jax.random.randint(ks[3], (m, cap), 0, labels_per_client)
+        y = jnp.take_along_axis(base, pick, axis=1)
+
+    noise = spec.noise * jax.random.normal(ks[4], (m, cap, spec.dim))
+    x = mu[y] + noise
+
+    n_poison = int(round(poison_ratio * m))
+    poisoned = jnp.zeros((m,), bool)
+    if n_poison:
+        idx = jax.random.permutation(ks[5], m)[:n_poison]
+        poisoned = poisoned.at[idx].set(True)
+    y_train = jnp.where(poisoned[:, None], (NUM_CLASSES - 1) - y, y)
+
+    yv = jax.random.randint(ks[6], (val_size,), 0, NUM_CLASSES)
+    xv = mu[yv] + spec.noise * jax.random.normal(ks[7], (val_size, spec.dim))
+    return FedData(x=x, y=y, y_train=y_train, mask=mask,
+                   sizes=sizes.astype(jnp.float32), poisoned=poisoned,
+                   x_val=xv, y_val=yv)

@@ -1,0 +1,43 @@
+"""Host-sharded batching pipeline for LM training.
+
+Single-host here, but structured the way a multi-host input pipeline is:
+each host draws the deterministic per-step key, generates/loads only its
+``process_index`` slice of the global batch, and the arrays are laid out to
+match the (pod, data) batch sharding.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+
+from .synthetic import lm_token_batch
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+
+
+def host_batch_slice(cfg: PipelineConfig) -> tuple[int, int]:
+    """(start, size) of this host's slice of the global batch."""
+    n = jax.process_count()
+    i = jax.process_index()
+    per = cfg.global_batch // n
+    return i * per, per
+
+
+def lm_batches(cfg: PipelineConfig) -> Iterator[dict]:
+    key = jax.random.PRNGKey(cfg.seed)
+    start, per = host_batch_slice(cfg)
+    step = 0
+    while True:
+        k = jax.random.fold_in(jax.random.fold_in(key, step), start)
+        toks = lm_token_batch(k, per, cfg.seq_len + 1, cfg.vocab_size)
+        yield {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        step += 1

@@ -1,0 +1,35 @@
+"""Dispatch wrappers: Pallas kernel on TPU, interpret-mode kernel for CPU
+validation, jnp oracle as the portable fallback.
+
+The model stack calls these through ``cfg.use_pallas``; the SPMD dry-run uses
+the jnp path (Pallas does not lower on the CPU backend outside interpret
+mode — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+
+from .ref import ssd_scan_ref, swa_attention_ref
+from .ssd_scan import ssd_scan_pallas
+from .swa_attention import swa_attention_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan(x, dt, a, b, c, chunk: int = 128, mode: str = "auto"):
+    """mode: auto | pallas | interpret | ref"""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return ssd_scan_ref(x, dt, a, b, c)
+    interpret = (mode == "interpret") or not _on_tpu()
+    return ssd_scan_pallas(x, dt, a, b, c, chunk=chunk, interpret=interpret)
+
+
+def swa_attention(q, k, v, window: int = 0, softcap: float = 0.0,
+                  block: int = 128, mode: str = "auto"):
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return swa_attention_ref(q, k, v, window=window, softcap=softcap)
+    interpret = (mode == "interpret") or not _on_tpu()
+    return swa_attention_pallas(q, k, v, window=window, softcap=softcap,
+                                block=block, interpret=interpret)

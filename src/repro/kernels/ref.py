@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for the Pallas kernels (the ground truth the kernels are
+validated against, shape-for-shape)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def ssd_scan_ref(x, dt, a, b, c):
+    """Sequential SSM recurrence.  x: [BH,S,P], dt: [BH,S], a: [BH],
+    b/c: [BH,S,N] -> y [BH,S,P].  O(S) scan — slow but exact."""
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    b32, c32 = b.astype(jnp.float32), c.astype(jnp.float32)
+
+    def per_t(state, inp):
+        xt, dtt, bt, ct = inp               # [BH,P],[BH],[BH,N],[BH,N]
+        da = jnp.exp(dtt * a)               # [BH]
+        state = state * da[:, None, None] + jnp.einsum(
+            "g,gn,gp->gnp", dtt, bt, xt)
+        y = jnp.einsum("gn,gnp->gp", ct, state)
+        return state, y
+
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    init = jnp.zeros((bh, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dt32, 1, 0),
+          jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0))
+    _, ys = jax.lax.scan(per_t, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def swa_attention_ref(q, k, v, window: int = 0, softcap: float = 0.0):
+    """Causal (optionally sliding-window) attention.
+    q/k/v: [BH, S, D] -> [BH, S, D]."""
+    s = q.shape[1]
+    scores = jnp.einsum("gqd,gkd->gqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    ok = ki <= qi
+    if window > 0:
+        ok &= (qi - ki) < window
+    scores = jnp.where(ok[None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("gqk,gkd->gqd", probs.astype(v.dtype), v)

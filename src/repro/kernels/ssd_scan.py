@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: Mamba2 SSD chunked scan (arXiv:2405.21060 §6).
+
+TPU adaptation (DESIGN.md §3): the GPU reference splits the SSD into
+chunk-parallel matmuls + an inter-chunk recurrence launched as separate
+kernels.  On TPU we fuse both into ONE kernel using the sequential-grid
+property of Pallas/Mosaic: the grid's last dimension iterates chunks in
+order ("arbitrary" dimension semantics), carrying the running SSM state in a
+VMEM scratch accumulator — no HBM round-trip for the recurrence, and every
+matmul is MXU-shaped ([L×N]·[N×P] with L,P,N multiples of 64/128).
+
+Per (batch·head, chunk) block:
+    dA       = dt ⊙ A                       [L]
+    y_diag   = ((C Bᵀ) ∘ L(decay)) (dt ⊙ x) [L,P]   (intra-chunk, MXU)
+    y_off    = (C ⊙ exp(cumsum dA)) · state [L,P]   (inter-chunk read)
+    state    = state·exp(Σ dA) + Bᵀ·(decay dt x)    (carried in VMEM scratch)
+
+Layouts: x [BH, S, P], dt [BH, S], B/C [BH, S, N]  (heads pre-flattened into
+the leading dim; ngroups expanded by the wrapper).  f32 accumulation
+throughout; inputs may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    l = chunk
+    x = x_ref[0].astype(jnp.float32)          # [L, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [L]
+    b = b_ref[0].astype(jnp.float32)          # [L, N]
+    c = c_ref[0].astype(jnp.float32)          # [L, N]
+    a = a_ref[0]                              # scalar A (negative)
+
+    da = dt * a                               # [L]
+    da_cs = jnp.cumsum(da)                    # [L]
+
+    # intra-chunk: gate[i,j] = exp(cs_i - cs_j)·dt_j for i ≥ j
+    seg = da_cs[:, None] - da_cs[None, :]     # [L, L]
+    causal = jax.lax.broadcasted_iota(jnp.int32, (l, l), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    gate = jnp.where(causal, jnp.exp(seg) * dt[None, :], 0.0)
+    cb = jnp.dot(c, b.T, preferred_element_type=jnp.float32)   # [L, L]
+    y = jnp.dot(cb * gate, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk: read carried state
+    state = state_ref[...]                    # [N, P]
+    y += jnp.dot(c * jnp.exp(da_cs)[:, None], state,
+                 preferred_element_type=jnp.float32)
+
+    # state update: state' = state·exp(Σda) + Σ_j decay_j dt_j B_j x_jᵀ
+    decay = jnp.exp(da_cs[-1] - da_cs)        # [L]
+    state_ref[...] = state * jnp.exp(da_cs[-1]) + jnp.dot(
+        (b * (decay * dt)[:, None]).T, x, preferred_element_type=jnp.float32)
+
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_pallas(x, dt, a, b, c, chunk: int = 128, interpret: bool = True):
+    """x: [BH, S, P], dt: [BH, S], a: [BH], b/c: [BH, S, N] -> y like x.
+
+    ``interpret=True`` executes on CPU for validation; on TPU pass False.
+    """
+    bh, s, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    grid = (bh, nc)
+
+    kern = functools.partial(_ssd_kernel, chunk=chunk)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),                    # a
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),      # x
+            pl.BlockSpec((1, chunk), lambda i, j: (i, j)),            # dt
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),      # b
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),      # c
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+        **kwargs,
+    )(a, x, dt, b, c)

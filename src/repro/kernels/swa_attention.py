@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: causal flash attention with sliding-window support.
+
+Used by the gemma2/gemma3 local layers and the long-context decode variants
+(DESIGN.md §4).  TPU adaptation of flash attention:
+
+  * grid = (batch·heads, q_blocks, k_blocks) — the k dimension is the
+    innermost sequential ("arbitrary") dimension; online-softmax statistics
+    (m, l) and the output accumulator live in VMEM scratch across k steps.
+  * sliding window: for window W the k grid has only (W + Lq)/Lk blocks per
+    q block, and the k BlockSpec index-map slides with the q index —
+    true O(S·W) work instead of O(S²) (GPU implementations get this by
+    early-exiting thread blocks; on TPU we shape the grid instead).
+  * blocks are 128×128 — MXU-aligned; VMEM per step ≈ q,k,v,acc blocks
+    = 4·128·head_dim·4B ≲ 0.5 MB, well under the ~16 MB VMEM budget.
+
+Validated in interpret mode against ``ref.swa_attention_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MASK = -1.0e30
+M_INIT = -0.5e30
+
+
+def _swa_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                lq: int, lk: int, nk: int, window: int, softcap: float,
+                scale: float):
+    qi = pl.program_id(1)
+    kr = pl.program_id(2)
+
+    @pl.when(kr == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, M_INIT)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [Lq, D]
+    k = k_ref[0].astype(jnp.float32)          # [Lk, D]
+    v = v_ref[0].astype(jnp.float32)          # [Lk, D]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+
+    if window > 0:
+        kb = qi - (nk - 1) + kr               # true (unclamped) k block
+    else:
+        kb = kr
+    qpos = qi * lq + jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 0)
+    kpos = kb * lk + jax.lax.broadcasted_iota(jnp.int32, (lq, lk), 1)
+    ok = (kpos <= qpos) & (kb >= 0)
+    if window > 0:
+        ok &= (qpos - kpos) < window
+    s = jnp.where(ok, s, MASK)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = corr * l_prev + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...] = m_new, l_new
+
+    @pl.when(kr == nk - 1)
+    def _out():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "softcap", "block", "interpret"))
+def swa_attention_pallas(q, k, v, window: int = 0, softcap: float = 0.0,
+                         block: int = 128, interpret: bool = True):
+    """q/k/v: [BH, S, D] -> [BH, S, D]; causal, optional sliding window.
+
+    window must be a multiple of ``block`` (or 0 = global causal).
+    """
+    bh, s, d = q.shape
+    assert s % block == 0, (s, block)
+    nq = s // block
+    if window > 0:
+        assert window % block == 0, (window, block)
+        nk = min(nq, window // block + 1)
+    else:
+        nk = nq
+
+    def k_index(i, qi, kr):
+        if window > 0:
+            return (i, jnp.maximum(qi - (nk - 1) + kr, 0), 0)
+        return (i, kr, 0)
+
+    kern = functools.partial(_swa_kernel, lq=block, lk=block, nk=nk,
+                             window=window, softcap=softcap,
+                             scale=1.0 / (d ** 0.5))
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block, d), lambda i, qi, kr: (i, qi, 0)),
+            pl.BlockSpec((1, block, d), k_index),
+            pl.BlockSpec((1, block, d), k_index),
+        ],
+        out_specs=pl.BlockSpec((1, block, d), lambda i, qi, kr: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block,), jnp.float32),      # m
+            pltpu.VMEM((block,), jnp.float32),      # l
+            pltpu.VMEM((block, d), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(q, k, v)

@@ -1,0 +1,316 @@
+import os
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below may import jax.  Tests that want a
+# smaller mesh pre-set their own device count (tests/test_dryrun.py).
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the production meshes, and dump memory / cost / collective analyses.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-2.7b --shape long_500k --mesh multipod
+
+Results land in runs/dryrun/<arch>_<shape>_<mesh>.json (cached; --force to
+redo).  EXPERIMENTS.md §Dry-run and benchmarks/roofline.py read these.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, ALIASES, get_config
+from ..models import init_params
+from ..optim import AdamWConfig, init_opt_state
+from ..sharding.rules import (batch_shardings, cache_shardings,
+                              params_shardings, replicated)
+from .mesh import make_production_mesh
+from .specs import SHAPES, adapt_config, input_specs, shape_applicable
+from .steps import make_prefill, make_serve_step, make_train_step
+
+RESULTS_DIR = "runs/dryrun"
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(?:\()?(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device collective bytes by op type, parsed from optimized HLO.
+
+    Operand sizes are looked up from each operand's defining instruction;
+    shapes in the SPMD module are per-device shards, so the totals are
+    bytes-per-device."""
+    sizes = {}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2), m.group(3))
+    stats = {op: {"count": 0, "operand_bytes": 0} for op in COLLECTIVE_OPS}
+    opnd_re = re.compile(r"%?([\w.\-]+)")
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        for op in COLLECTIVE_OPS:
+            # match the op name as the instruction, not inside metadata
+            if re.search(rf"\)?\s{op}(?:-start|-done)?\(", stripped) or \
+               re.search(rf"=\s*\S+\s+{op}(?:-start)?\(", stripped):
+                if f"{op}-done" in stripped:
+                    continue  # counted at -start
+                args = stripped.split(op, 1)[1]
+                args = args[args.find("(") + 1:]
+                depth, end = 1, 0
+                for i, ch in enumerate(args):
+                    depth += ch == "("
+                    depth -= ch == ")"
+                    if depth == 0:
+                        end = i
+                        break
+                operand_names = [n for n in opnd_re.findall(args[:end])
+                                 if n in sizes]
+                stats[op]["count"] += 1
+                stats[op]["operand_bytes"] += sum(sizes[n]
+                                                  for n in operand_names)
+                break
+    stats["total_bytes"] = sum(v["operand_bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _mem_dict(mem) -> dict:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def build_lowerable(arch: str, shape_name: str, mesh, overrides=None):
+    """Returns (fn, args, in_shardings, out_shardings, donate, meta)."""
+    cfg = adapt_config(get_config(arch), SHAPES[shape_name])
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    shape = SHAPES[shape_name]
+    key = jax.random.PRNGKey(0)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, key))
+    pshard = params_shardings(params_sds, mesh)
+    specs = input_specs(cfg, shape)
+    rep = replicated(mesh)
+
+    if shape.mode == "train":
+        opt_cfg = AdamWConfig(moment_dtype=cfg.param_dtype,
+                              chunked_update_bytes=2**28 if cfg.chunked_optimizer else 0,
+                              update_in_moment_dtype=cfg.optimizer_lowp_update)
+        opt_sds = jax.eval_shape(lambda: init_opt_state(params_sds, opt_cfg))
+        oshard = params_shardings(opt_sds, mesh)
+        oshard["count"] = rep
+        batch_sds = specs["batch"]
+        bshard = batch_shardings(batch_sds, mesh)
+        shards = 1
+        for a in ("pod", "data"):
+            if a in mesh.shape:
+                shards *= mesh.shape[a]
+        n_micro = max(1, min(cfg.train_microbatches,
+                             shape.global_batch // shards))
+        fn = make_train_step(cfg, opt_cfg, num_microbatches=n_micro)
+        args = (params_sds, opt_sds, batch_sds)
+        in_sh = (pshard, oshard, bshard)
+        out_sh = (pshard, oshard, None)
+        donate = (0, 1)
+        meta = {"n_micro": n_micro, "mode": "train"}
+    elif shape.mode == "prefill":
+        fn = make_prefill(cfg)
+        args = (params_sds, specs["batch"])
+        in_sh = (pshard, batch_shardings(specs["batch"], mesh))
+        out_sh = None
+        donate = ()
+        meta = {"mode": "prefill"}
+    else:
+        fn = make_serve_step(cfg)
+        caches = specs["caches"]
+        cshard = cache_shardings(caches, mesh)
+        tshard = batch_shardings({"t": specs["token"]}, mesh)["t"]
+        # §Perf (decode collective-bound): FSDP layouts all-gather the
+        # weights EVERY token.  When the TP-only shard fits the HBM budget
+        # AND the batch is large enough that the per-token gather matters,
+        # keep weights model-resident; the 340B class (and batch=1
+        # long-context, where the gather amortizes differently and HBM is
+        # cache-dominated) stays FSDP.
+        p_bytes = cfg.param_count() * cfg.storage_dtype.itemsize
+        tp_size = mesh.shape.get("model", 1)
+        tp_resident = (p_bytes / tp_size <= 4 * 2**30
+                       and shape.global_batch >= 16)
+        if tp_resident:
+            pshard = params_shardings(params_sds, mesh, fsdp_axis=None)
+        args = (params_sds, specs["token"], caches)
+        in_sh = (pshard, tshard, cshard)
+        out_sh = (None, cshard)
+        donate = (2,)
+        meta = {"mode": "decode", "decode_window": cfg.decode_window,
+                "tp_resident_weights": tp_resident}
+    meta.update({
+        "arch": arch, "shape": shape_name,
+        "params_total": cfg.param_count(),
+        "params_active": cfg.active_param_count(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "family": cfg.family,
+    })
+    return fn, args, in_sh, out_sh, donate, meta
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            force: bool = False, overrides=None, tag: str = "") -> dict:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    suffix = f"_{tag}" if tag else ""
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}_{shape_name}_{mesh_kind}{suffix}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    ok, reason = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "status": "skipped", "reason": reason}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    t0 = time.time()
+    from ..sharding.context import set_active_mesh
+    set_active_mesh(mesh)   # enables intra-jit sharding constraints at trace
+    try:
+        fn, args, in_sh, out_sh, donate, meta = build_lowerable(
+            arch, shape_name, mesh, overrides=overrides)
+        jfn = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=donate)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = _mem_dict(compiled.memory_analysis())
+        cost = dict(compiled.cost_analysis() or {})
+        cost = {k: float(v) for k, v in cost.items()
+                if isinstance(v, (int, float))}
+        hlo_text = compiled.as_text()
+        coll = collective_stats(hlo_text)
+        # persist optimized HLO for the trip-count-aware roofline walker
+        import zstandard as zstd
+        hlo_dir = os.path.join(RESULTS_DIR, "hlo")
+        os.makedirs(hlo_dir, exist_ok=True)
+        with open(os.path.join(
+                hlo_dir, f"{arch}_{shape_name}_{mesh_kind}{suffix}.hlo.zst"), "wb") as f:
+            f.write(zstd.ZstdCompressor(level=3).compress(hlo_text.encode()))
+        n_chips = 1
+        for v in mesh.shape.values():
+            n_chips *= v
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "ok", "n_chips": n_chips,
+            "meta": meta, "memory": mem,
+            "cost": {"flops": cost.get("flops", 0.0),
+                     "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            "cost_raw": cost,
+            "collectives": coll,
+            "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                  "status": "error", "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:],
+                  "elapsed_s": round(time.time() - t0, 2)}
+    finally:
+        set_active_mesh(None)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def parse_overrides(pairs):
+    """key=value strings → typed config overrides (bool/int/float/str)."""
+    out = {}
+    for pair in pairs:
+        k, v = pair.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable), e.g. "
+                         "--set seq_shard_activations=true --set moe_impl=ep")
+    args = ap.parse_args()
+    overrides = parse_overrides(args.set)
+
+    if args.all:
+        combos = [(a, s, m) for a in ALIASES
+                  for s in SHAPES for m in ("pod", "multipod")]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape, meshk in combos:
+        r = run_one(arch, shape, meshk, force=args.force,
+                    overrides=overrides or None,
+                    tag="custom" if overrides else "")
+        status = r["status"]
+        line = f"{arch:24s} {shape:12s} {meshk:8s} {status}"
+        if status == "ok":
+            mem = r["memory"]
+            per_dev = (mem.get("argument_size_in_bytes", 0)
+                       + mem.get("temp_size_in_bytes", 0)
+                       + mem.get("output_size_in_bytes", 0)
+                       - mem.get("alias_size_in_bytes", 0))
+            line += (f"  mem/dev={per_dev/2**30:.2f}GiB "
+                     f"flops={r['cost']['flops']:.3g} "
+                     f"coll={r['collectives']['total_bytes']/2**20:.1f}MiB "
+                     f"compile={r['compile_s']:.0f}s")
+        elif status == "error":
+            line += f"  {r['error'][:120]}"
+        print(line, flush=True)
+
+
+if __name__ == "__main__":
+    main()

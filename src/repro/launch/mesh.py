@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Target hardware: TPU v5e pods — 256 chips/pod (16×16), 197 TFLOP/s bf16,
+16 GB @ 819 GB/s HBM, ~50 GB/s/link ICI.  Defined as FUNCTIONS so importing
+this module never touches jax device state (the dry-run must set
+``xla_force_host_platform_device_count`` before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run entry point must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (see launch/dryrun.py)")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, n // data)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# hardware constants for the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_BW_PER_LINK = 50e9          # B/s per link

@@ -1,0 +1,79 @@
+"""Batched serving driver: prime a KV cache by stepping the prompt, then
+decode with a jitted serve_step.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma2-9b --smoke \\
+        --batch 4 --prompt-len 16 --gen 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, smoke_variant
+from ..models import decode_step, init_caches, init_params, prefill_with_caches
+from .steps import make_serve_step
+
+
+def generate(cfg, params, prompt, max_seq: int, gen: int, greedy=True,
+             key=None, prime: str = "prefill"):
+    """prompt: [B, P] int32 → returns [B, P+gen] tokens.
+
+    prime="prefill" runs the one-pass cache-collecting prefill;
+    prime="steps" replays the prompt through decode_step (reference path).
+    """
+    b, plen = prompt.shape
+    step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
+    toks = prompt
+    if prime == "prefill":
+        logits, caches = jax.jit(
+            lambda p, t: prefill_with_caches(p, {"tokens": t}, cfg, max_seq)
+        )(params, prompt)
+    else:
+        caches = init_caches(cfg, b, max_seq)
+        logits = None
+        for t in range(plen):        # prime the cache token by token
+            logits, caches = step(params, toks[:, t:t + 1], caches)
+    for t in range(gen):
+        if greedy or key is None:
+            nxt = jnp.argmax(logits, axis=-1)[:, None]
+        else:
+            key, sk = jax.random.split(key)
+            nxt = jax.random.categorical(sk, logits)[:, None]
+        toks = jnp.concatenate([toks, nxt.astype(jnp.int32)], axis=1)
+        logits, caches = step(params, nxt.astype(jnp.int32), caches)
+    return toks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                (args.batch, args.prompt_len), 0,
+                                cfg.vocab_size)
+    t0 = time.time()
+    toks = generate(cfg, params, prompt,
+                    max_seq=args.prompt_len + args.gen + 1, gen=args.gen)
+    dt = time.time() - t0
+    n_new = args.batch * args.gen
+    print(f"arch={cfg.name} batch={args.batch} generated {args.gen} tokens "
+          f"per seq in {dt:.2f}s → {n_new/dt:.1f} tok/s (incl. priming)")
+    print("sample:", toks[0, :32].tolist())
+
+
+if __name__ == "__main__":
+    main()

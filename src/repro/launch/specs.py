@@ -1,0 +1,95 @@
+"""ShapeDtypeStruct input specs for every (architecture × input shape).
+
+Shapes assigned to this paper:
+  train_4k      seq_len=4,096    global_batch=256   (training)
+  prefill_32k   seq_len=32,768   global_batch=32    (inference-prefill)
+  decode_32k    seq_len=32,768   global_batch=128   (inference-decode)
+  long_500k     seq_len=524,288  global_batch=1     (long-context-decode)
+
+Decode shapes lower ``serve_step`` — ONE token against a seq_len-deep KV
+cache.  ``long_500k`` forces the sliding-window decode variant for
+pure-full-attention archs (DESIGN.md §4); SSM/hybrid archs and gemma's
+native local:global patterns run unmodified.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..models import init_caches
+from ..models.config import MAMBA, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # train | prefill | decode
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+LONG_DECODE_WINDOW = 4_096
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(applicable, reason-if-not). seamless skips long_500k (DESIGN.md §4)."""
+    if shape.name == "long_500k" and cfg.family == "audio":
+        return False, ("enc-dec speech model: 500k-token decode is outside "
+                       "the family's operating regime (skip per DESIGN.md §4)")
+    return True, ""
+
+
+def adapt_config(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (sub-quadratic variant for long_500k)."""
+    if shape.name == "long_500k":
+        pure_full_attn = (not any(s.kind == MAMBA for s in cfg.pattern)
+                          and all(s.window == 0 for s in cfg.pattern))
+        if pure_full_attn:
+            cfg = cfg.replace(decode_window=LONG_DECODE_WINDOW)
+    return cfg
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, SDS]:
+    b, s = shape.global_batch, shape.seq_len
+    i32, f32 = jnp.int32, jnp.float32
+    if shape.mode in ("train", "prefill"):
+        if cfg.num_patch_tokens:
+            p = cfg.num_patch_tokens
+            spec = {"tokens": SDS((b, s - p), i32),
+                    "patches": SDS((b, p, cfg.d_model), f32)}
+            if shape.mode == "train":
+                spec["targets"] = SDS((b, s - p), i32)
+            return spec
+        spec = {"tokens": SDS((b, s), i32)}
+        if shape.mode == "train":
+            spec["targets"] = SDS((b, s), i32)
+        if cfg.encoder_layers:
+            spec["frames"] = SDS((b, s // cfg.encoder_ratio, cfg.d_model), f32)
+        return spec
+    raise ValueError(shape.mode)
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Cache pytree as ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(
+        lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict:
+    """Everything the lowered step function consumes, minus params/opt."""
+    if shape.mode in ("train", "prefill"):
+        return {"batch": token_specs(cfg, shape)}
+    return {"token": SDS((shape.global_batch, 1), jnp.int32),
+            "caches": cache_specs(cfg, shape)}

@@ -1,0 +1,75 @@
+"""Step factories: train_step (with gradient accumulation), prefill,
+serve_step (one-token decode).  These are the functions the dry-run lowers
+and the drivers jit."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward_logits, loss_fn, prefill
+from ..models.config import ModelConfig
+from ..optim import AdamWConfig, adamw_update, global_norm, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    num_microbatches: int = 0) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    Gradient accumulation: the global batch is reshaped to
+    [n_micro, B/n_micro, ...] and scanned, accumulating f32 grads.
+    """
+    n_micro = num_microbatches or cfg.train_microbatches
+
+    def micro_grads(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, mb, cfg), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if n_micro > 1:
+            from ..sharding.context import constrain_batch
+
+            def reshape(x):
+                b = x.shape[0]
+                y = x.reshape((n_micro, b // n_micro) + x.shape[1:])
+                # keep the per-microbatch batch dim sharded over (pod, data)
+                return constrain_batch(y, batch_dim=1)
+            micro = jax.tree_util.tree_map(reshape, batch)
+
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+
+            def body(acc, mb):
+                loss_acc, g_acc = acc
+                loss, _, grads = micro_grads(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(acc_dt), g_acc, grads)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (loss_sum, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), g0),
+                                                micro)
+            loss = loss_sum / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+        else:
+            loss, _, grads = micro_grads(params, batch)
+        new_params, new_opt = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads)}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(params, batch, cfg)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, token, caches):
+        return decode_step(params, token, caches, cfg)
+    return serve_step

@@ -1,0 +1,132 @@
+"""Training launcher.
+
+Two modes:
+
+  * centralized LM training on the local mesh (any --arch, reduced or full):
+      PYTHONPATH=src python -m repro.launch.train --arch gemma2-9b --smoke \\
+          --steps 50 --global-batch 8 --seq-len 256
+  * federated (the paper's system): DT-assisted FL with reputation selection
+    and Stackelberg allocation driving per-round scheduling:
+      PYTHONPATH=src python -m repro.launch.train --federated --rounds 30
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, smoke_variant
+from ..data.pipeline import PipelineConfig, lm_batches
+from ..models import init_params
+from ..optim import AdamWConfig, init_opt_state
+from ..checkpoint.io import save_checkpoint
+from .mesh import make_host_mesh
+from .steps import make_train_step
+
+
+def centralized(args):
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    cfg = cfg.replace(train_microbatches=args.microbatches)
+    if args.set:
+        from .dryrun import parse_overrides
+        cfg = cfg.replace(**parse_overrides(args.set))
+    pipe = PipelineConfig(global_batch=args.global_batch,
+                          seq_len=args.seq_len, vocab_size=cfg.vocab_size,
+                          seed=args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    opt_cfg = AdamWConfig(lr=args.lr, moment_dtype=cfg.param_dtype)
+    opt = init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg,
+                                      num_microbatches=args.microbatches),
+                      donate_argnums=(0, 1))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.global_batch}x{args.seq_len}")
+    it = lm_batches(pipe)
+    t0 = time.time()
+    for step in range(args.steps):
+        batch = next(it)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            tok_s = (step + 1) * args.global_batch * args.seq_len / dt
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} tok/s {tok_s:.0f}",
+                  flush=True)
+        if args.ckpt_every and step and step % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, {"params": params}, step)
+    if args.ckpt_every:
+        save_checkpoint(args.ckpt_dir, {"params": params}, args.steps)
+    print(f"done: final loss {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+def federated(args):
+    from ..core.channel import sample_positions
+    from ..core.digital_twin import DTConfig, sample_v_max
+    from ..core.fl_round import FLConfig, FLState, run_training
+    from ..core.reputation import init_reputation
+    from ..core.stackelberg import GameConfig
+    from ..data.federated import make_federated_data
+    from ..data.synthetic import SYNTHETIC_MNIST
+    from ..models.classifier import make_classifier
+
+    key = jax.random.PRNGKey(args.seed)
+    ks = jax.random.split(key, 6)
+    data = make_federated_data(ks[0], SYNTHETIC_MNIST, m=args.clients,
+                               cap=128, poison_ratio=args.poison_ratio)
+    params, logits_fn = make_classifier("mlp", ks[1], in_dim=784, hidden=64)
+    fl = FLConfig(scheme=args.scheme, epsilon=args.epsilon,
+                  local_steps=15, server_steps=15, lr=0.1)
+    state = FLState(params=params, rep=init_reputation(args.clients),
+                    v_max=sample_v_max(ks[2], args.clients, DTConfig()),
+                    distances=sample_positions(ks[3], args.clients), key=ks[4])
+    state, hist = run_training(state, data, fl, GameConfig(), logits_fn,
+                               args.rounds)
+    for h in hist[:: max(1, args.rounds // 10)]:
+        print(json.dumps({k: v for k, v in h.items()
+                          if not hasattr(v, "shape")}), flush=True)
+    print(f"final acc {hist[-1]['val_acc']:.4f} "
+          f"mean cost {sum(h['total_cost'] for h in hist)/len(hist):.3f}")
+    return hist[-1]["val_acc"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-9b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke variant of --arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="runs/ckpt")
+    # federated mode
+    ap.add_argument("--federated", action="store_true")
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=20)
+    ap.add_argument("--poison-ratio", type=float, default=0.0)
+    ap.add_argument("--epsilon", type=float, default=0.0)
+    ap.add_argument("--scheme", default="proposed")
+    ap.add_argument("--set", action="append", default=[],
+                    help="model-config override key=value (repeatable)")
+    args = ap.parse_args()
+    if args.federated:
+        federated(args)
+    else:
+        centralized(args)
+
+
+if __name__ == "__main__":
+    main()

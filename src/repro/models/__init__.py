@@ -1,0 +1,10 @@
+from .config import (ATTN, CROSS, MAMBA, MOE, SHARED_ATTN, BlockSpec,
+                     ModelConfig, uniform_pattern)
+from .model import (cross_entropy, decode_step, forward_logits, init_caches,
+                    init_params, loss_fn, prefill, prefill_with_caches)
+
+__all__ = [
+    "ATTN", "CROSS", "MAMBA", "MOE", "SHARED_ATTN", "BlockSpec", "ModelConfig",
+    "uniform_pattern", "cross_entropy", "decode_step", "forward_logits",
+    "init_caches", "init_params", "loss_fn", "prefill", "prefill_with_caches",
+]

@@ -1,0 +1,250 @@
+"""Grouped-query attention with sliding-window support and KV caches.
+
+Three execution paths:
+  * ``attn_full``    — full score matrix; used for short sequences (train_4k,
+                       smoke tests) and for the encoder.
+  * ``attn_blocked`` — ``lax.scan`` over query chunks, with static key-window
+                       slicing for local layers; used for 32k prefill.  This
+                       is the jnp twin of ``kernels/swa_attention.py``.
+  * ``attn_decode``  — one query against a (possibly ring-buffer) KV cache.
+
+Caches store *RoPE-rotated* keys, so ring-buffer slots need no absolute
+position bookkeeping: softmax only needs a validity mask.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, softcap
+from .params import dense_init, ones_init, split_tree
+
+NEG_INF = -2.0e38
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.storage_dtype
+    ks = split_tree(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), dt),
+        "wk": dense_init(ks[1], (d, kv, hd), dt),
+        "wv": dense_init(ks[2], (d, kv, hd), dt),
+        "wo": dense_init(ks[3], (h, hd, d), dt, in_axis=0),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ones_init(ks[4], (hd,), dt)
+        p["k_norm"] = ones_init(ks[5], (hd,), dt)
+    return p
+
+
+def _qk_norm(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def qkv(p, x, positions, cfg: ModelConfig, rope: bool = True):
+    dt = cfg.compute_dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "q_norm" in p:
+        q = _qk_norm(q, p["q_norm"], cfg.norm_eps)
+        k = _qk_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q, k, cfg: ModelConfig):
+    """q: [B,Sq,H,hd]  k: [B,Sk,KV,hd]  ->  [B,KV,rep,Sq,Sk] (f32)."""
+    b, sq, h, hd = q.shape
+    kv = cfg.num_kv_heads
+    rep = h // kv
+    qg = q.reshape(b, sq, kv, rep, hd)
+    s = jnp.einsum("bskrd,btkd->bkrst", qg, k).astype(jnp.float32)
+    s = s / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    return softcap(s, cfg.attn_softcap)
+
+
+def _gqa_out(probs, v, p, cfg: ModelConfig):
+    """probs: [B,KV,rep,Sq,Sk]  v: [B,Sk,KV,hd]  -> [B,Sq,D]."""
+    dt = cfg.compute_dtype
+    o = jnp.einsum("bkrst,btkd->bskrd", probs.astype(dt), v)
+    b, sq = o.shape[0], o.shape[1]
+    o = o.reshape(b, sq, cfg.num_heads, cfg.head_dim)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(dt))
+
+
+def _mask_bias(q_pos, k_pos, window, causal: bool):
+    """Additive bias [..., Sq, Sk] from positions; window<=0 = unbounded."""
+    d = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = jnp.ones(d.shape, bool)
+    if causal:
+        ok &= d >= 0
+    if isinstance(window, int):
+        if window > 0:
+            ok &= d < window
+    else:  # traced per-layer window scalar: 0 means full
+        ok &= (window <= 0) | (d < window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# full path
+# ---------------------------------------------------------------------------
+def attn_full(p, x, positions, window, cfg: ModelConfig, causal: bool = True,
+              kv_override=None):
+    q, k, v = qkv(p, x, positions, cfg)
+    if kv_override is not None:                    # cross-attention
+        k, v = kv_override
+        kpos = jnp.arange(k.shape[1])
+    else:
+        kpos = positions
+    s = _gqa_scores(q, k, cfg)
+    bias = _mask_bias(positions, kpos, window, causal)  # [Sq,Sk] (+batch dims broadcast)
+    s = s + bias
+    probs = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(probs, v, p, cfg), (k, v)
+
+
+# ---------------------------------------------------------------------------
+# blocked path (long prefill)
+# ---------------------------------------------------------------------------
+def attn_blocked(p, x, positions, window, cfg: ModelConfig, chunk: int = 512,
+                 causal: bool = True, kv_override=None):
+    """Attention scanning over query chunks (memory-bounded).
+
+    For causal windowed layers the key range per chunk is a *static-length*
+    slice (window + chunk), giving true O(S·W) work; otherwise keys span the
+    full (causal or bidirectional / cross) range one query chunk at a time.
+    """
+    b, s, _ = x.shape
+    if s % chunk:
+        chunk = max(1, s // max(1, s // chunk))
+        while s % chunk:
+            chunk //= 2
+    q, k_self, v_self = qkv(p, x, positions, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+        kpos_full = jnp.arange(k.shape[1])
+    else:
+        k, v = k_self, v_self
+        kpos_full = positions
+    n = s // chunk
+    static_win = causal and isinstance(window, int) and window > 0 \
+        and kv_override is None
+    klen = min(s, window + chunk) if static_win else k.shape[1]
+
+    def body(_, ci):
+        qs = ci * chunk
+        qc = jax.lax.dynamic_slice_in_dim(q, qs, chunk, axis=1)
+        qp = qs + jnp.arange(chunk)
+        if static_win:
+            ks = jnp.maximum(0, qs + chunk - klen)
+            kc = jax.lax.dynamic_slice_in_dim(k, ks, klen, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(v, ks, klen, axis=1)
+            kp = ks + jnp.arange(klen)
+        else:
+            kc, vc, kp = k, v, kpos_full
+        sc = _gqa_scores(qc, kc, cfg) + _mask_bias(qp, kp, window, causal)
+        probs = jax.nn.softmax(sc, axis=-1)
+        return None, _gqa_out(probs, vc, p, cfg)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(n))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, cfg.d_model)
+    return out, (k_self, v_self)
+
+
+def attention(p, x, positions, window, cfg: ModelConfig, causal: bool = True,
+              kv_override=None, blocked_threshold: int = 2048):
+    s = x.shape[1]
+    if s > blocked_threshold:
+        return attn_blocked(p, x, positions, window, cfg, causal=causal,
+                            kv_override=kv_override)
+    return attn_full(p, x, positions, window, cfg, causal, kv_override)
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, seq_len: int, window: int,
+                  prefix_shape=()):
+    """Cache length = window when the layer is windowed (ring buffer).
+
+    ``kv_cache_dtype="int8"`` stores K/V as int8 with per-(token, head) f32
+    scales — 2× residency reduction vs bf16 (beyond-paper §Perf; opt-in)."""
+    c = min(seq_len, window) if window and window > 0 else seq_len
+    shape = prefix_shape + (batch, c, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    dt = cfg.compute_dtype
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def _quantize_kv(x):
+    """x: [B,1,KV,hd] → (int8 values, f32 scales [B,1,KV])."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_cache(cache, dtype):
+    """Returns (k, v) in compute dtype regardless of storage format."""
+    if "k_scale" in cache:
+        k = (cache["k"].astype(jnp.float32)
+             * cache["k_scale"][..., None]).astype(dtype)
+        v = (cache["v"].astype(jnp.float32)
+             * cache["v_scale"][..., None]).astype(dtype)
+        return k, v
+    return cache["k"], cache["v"]
+
+
+def cache_write(cache, k_new, v_new, pos):
+    """Write one token (k_new/v_new: [B,1,KV,hd]) at ring slot pos % C."""
+    c = cache["k"].shape[-3]
+    slot = jnp.mod(pos, c)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        return {
+            "k": jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, axis=-3),
+            "v": jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, axis=-3),
+            "k_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, slot, axis=-2),
+            "v_scale": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, slot, axis=-2),
+        }
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, slot, axis=-3)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, slot, axis=-3)
+    return {"k": k, "v": v}
+
+
+def attn_decode(p, x, cache, pos, cfg: ModelConfig, kv_override=None):
+    """x: [B,1,D]; returns (out [B,1,D], new_cache)."""
+    positions = jnp.full((x.shape[0], 1), pos)
+    q, k_new, v_new = qkv(p, x, positions, cfg)
+    if kv_override is not None:
+        k, v = kv_override
+        s = _gqa_scores(q, k, cfg)
+        probs = jax.nn.softmax(s, axis=-1)
+        return _gqa_out(probs, v, p, cfg), cache
+    cache = cache_write(cache, k_new, v_new, pos)
+    c = cache["k"].shape[-3]
+    k_all, v_all = dequantize_cache(cache, cfg.compute_dtype)
+    s = _gqa_scores(q, k_all, cfg)                        # [B,KV,rep,1,C]
+    valid = jnp.arange(c) <= pos                          # ring validity
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    probs = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(probs, v_all, p, cfg), cache

@@ -1,0 +1,88 @@
+"""Small classifiers for the paper's FL experiments (§VI).
+
+The paper trains on MNIST and CIFAR-10; offline we use synthetic proxies
+(see ``repro.data.synthetic``).  Two model families mirror the paper's setup:
+an MLP for the MNIST proxy and a small conv net for the CIFAR proxy.
+All pure-pytree, SGD-trainable per Eq. (2).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .params import dense_init, split_tree
+
+
+def init_mlp_classifier(key, in_dim: int = 784, hidden: int = 128,
+                        num_classes: int = 10, dtype=jnp.float32):
+    ks = split_tree(key, 3)
+    return {
+        "w1": dense_init(ks[0], (in_dim, hidden), dtype),
+        "b1": jnp.zeros((hidden,), dtype),
+        "w2": dense_init(ks[1], (hidden, hidden), dtype),
+        "b2": jnp.zeros((hidden,), dtype),
+        "w3": dense_init(ks[2], (hidden, num_classes), dtype),
+        "b3": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def mlp_classifier_logits(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def init_cnn_classifier(key, side: int = 16, channels: int = 3,
+                        num_classes: int = 10, dtype=jnp.float32):
+    """Small conv net for the CIFAR proxy (images reshaped [B,side,side,C])."""
+    ks = split_tree(key, 4)
+    return {
+        "c1": dense_init(ks[0], (3, 3, channels, 16), dtype, in_axis=2),
+        "c2": dense_init(ks[1], (3, 3, 16, 32), dtype, in_axis=2),
+        "w1": dense_init(ks[2], ((side // 4) ** 2 * 32, 64), dtype),
+        "b1": jnp.zeros((64,), dtype),
+        "w2": dense_init(ks[3], (64, num_classes), dtype),
+        "b2": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def cnn_classifier_logits(p, x):
+    b = x.shape[0]
+    side = int(round((x.shape[-1] / 3) ** 0.5))
+    img = x.reshape(b, side, side, 3)
+    h = jax.nn.relu(_conv(img, p["c1"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = jax.nn.relu(_conv(h, p["c2"]))
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    h = h.reshape(b, -1)
+    h = jax.nn.relu(h @ p["w1"] + p["b1"])
+    return h @ p["w2"] + p["b2"]
+
+
+def classifier_loss(logits_fn, p, x, y, num_classes: int = 10):
+    logits = logits_fn(p, x)
+    onehot = jax.nn.one_hot(y, num_classes)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def classifier_accuracy(logits_fn, p, x, y):
+    return jnp.mean((jnp.argmax(logits_fn(p, x), axis=-1) == y).astype(jnp.float32))
+
+
+def make_classifier(kind: str, key, **kw) -> Tuple[Dict, callable]:
+    if kind == "mlp":
+        return init_mlp_classifier(key, **kw), mlp_classifier_logits
+    if kind == "cnn":
+        return init_cnn_classifier(key, **kw), cnn_classifier_logits
+    raise ValueError(kind)

@@ -1,0 +1,115 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, embedding, softcap."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import dense_init, embed_init, ones_init, split_tree
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(key, d, dtype):
+    return {"scale": ones_init(key, (d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# softcap (gemma2)
+# ---------------------------------------------------------------------------
+def softcap(x, cap: float):
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    ang = ang[..., None, :]                             # [..., S, 1, hd/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    dt = cfg.storage_dtype
+    ks = split_tree(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, f), dt),
+         "w_out": dense_init(ks[1], (f, d), dt)}
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d, f), dt)
+    return p
+
+
+def _act(x, kind: str):
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "squared_relu":          # nemotron-4
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def mlp(p, x, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.activation == "swiglu":
+        h = _act(x @ p["w_gate"].astype(dt), "gelu") * (x @ p["w_in"].astype(dt))
+    else:
+        h = _act(x @ p["w_in"].astype(dt), cfg.activation)
+    return h @ p["w_out"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(key, cfg: ModelConfig):
+    dt = cfg.storage_dtype
+    ks = split_tree(key, 2)
+    v = cfg.padded_vocab_size
+    p = {"embedding": embed_init(ks[0], (v, cfg.d_model), dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[1], (cfg.d_model, v), dt)
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    # one-hot matmul embeds cleanly under SPMD vocab sharding (no gather).
+    e = jnp.take(p["embedding"].astype(cfg.compute_dtype), tokens, axis=0)
+    return e * jnp.sqrt(jnp.asarray(cfg.d_model, cfg.compute_dtype))
+
+
+def unembed(p, x, cfg: ModelConfig):
+    dt = cfg.compute_dtype
+    if cfg.tie_embeddings:
+        logits = x @ p["embedding"].astype(dt).T
+    else:
+        logits = x @ p["unembed"].astype(dt)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.padded_vocab_size != cfg.vocab_size:   # mask padded vocab rows
+        pad_mask = jnp.arange(cfg.padded_vocab_size) >= cfg.vocab_size
+        logits = jnp.where(pad_mask, -1e30, logits)
+    return logits

@@ -1,0 +1,169 @@
+"""Unified model API over the architecture zoo.
+
+Every architecture exposes four pure functions driven by ``ModelConfig``:
+
+  * ``init_params(cfg, key)``
+  * ``loss_fn(params, batch, cfg) -> (loss, metrics)``      (train_4k)
+  * ``prefill(params, batch, cfg) -> (logits, caches)``     (prefill_32k)
+  * ``decode_step(params, token, caches, cfg) -> (logits, caches)``  [logits are padded_vocab_size wide; padded rows are -inf]
+                                                            (decode_32k / long_500k)
+
+Batch conventions (all ShapeDtypeStruct-compatible for the dry-run):
+  dense/moe/ssm/hybrid : tokens [B,S] i32, targets [B,S] i32
+  vlm                  : + patches [B,P,d_model]  (stub ViT output)
+  audio (enc-dec)      : frames [B,S_enc,d_model] (stub codec output),
+                         tokens/targets [B,S]
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ATTN, BlockSpec, ModelConfig
+from .layers import embed, init_embed, init_rmsnorm, rmsnorm, unembed
+from .params import split_tree
+from .transformer import (init_stack, init_stack_cache, stack_decode,
+                          stack_forward)
+
+
+def encoder_pattern(cfg: ModelConfig) -> Tuple[BlockSpec, ...]:
+    return (BlockSpec(kind=ATTN, window=0),)
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    ks = split_tree(key, 4)
+    p = {"embed": init_embed(ks[0], cfg),
+         "decoder": init_stack(ks[1], cfg),
+         "final_norm": init_rmsnorm(ks[2], cfg.d_model, cfg.storage_dtype)}
+    if cfg.encoder_layers:
+        p["encoder"] = init_stack(ks[3], cfg, pattern=encoder_pattern(cfg),
+                                  num_layers=cfg.encoder_layers)
+        p["enc_norm"] = init_rmsnorm(ks[3], cfg.d_model, cfg.storage_dtype)
+    return p
+
+
+def _encode(params, frames, cfg: ModelConfig):
+    pos = jnp.arange(frames.shape[1])
+    h, _ = stack_forward(params["encoder"], frames.astype(cfg.compute_dtype),
+                         pos, cfg, pattern=encoder_pattern(cfg), causal=False)
+    return rmsnorm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    x = embed(params["embed"], batch["tokens"], cfg)
+    if cfg.num_patch_tokens:                      # vlm: patch prefix
+        patches = batch["patches"].astype(cfg.compute_dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = _encode(params, batch["frames"], cfg)
+    return x, enc_out
+
+
+def forward_logits(params, batch, cfg: ModelConfig, last_only: bool = False):
+    from ..sharding.context import constrain_batch
+    x, enc_out = _embed_inputs(params, batch, cfg)
+    x = constrain_batch(x)
+    positions = jnp.arange(x.shape[1])
+    h, aux = stack_forward(params["decoder"], x, positions, cfg, enc_out=enc_out)
+    if cfg.num_patch_tokens:                      # loss only over text region
+        h = h[:, cfg.num_patch_tokens:, :]
+    if last_only:                                 # prefill: only last logits
+        h = h[:, -1:, :]
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return constrain_batch(logits, vocab_dim=2), aux
+
+
+def cross_entropy(logits, targets, mask=None):
+    """Vocab-sharding-safe CE: one-hot einsum instead of gather."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = (targets[..., None] == jnp.arange(v)[None, None, :]).astype(jnp.float32)
+    tgt = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    nll = lse - tgt
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = forward_logits(params, batch, cfg)
+    ce = cross_entropy(logits, batch["targets"], batch.get("loss_mask"))
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
+    enc_len = seq_len // cfg.encoder_ratio if cfg.encoder_layers else 0
+    return init_stack_cache(cfg, batch, seq_len, enc_len)
+
+
+def prefill(params, batch, cfg: ModelConfig):
+    """Full-sequence forward returning last-position logits (the full-seq
+    hidden states are computed; only the final position is unembedded —
+    full-vocab logits for 32k positions would be a logits-sized whale)."""
+    logits, _ = forward_logits(params, batch, cfg, last_only=True)
+    return logits[:, -1, :]
+
+
+def prefill_with_caches(params, batch, cfg: ModelConfig, max_seq: int):
+    """One-pass serving prefill: full forward that also PRIMES the decode
+    caches (K/V collected per layer, windowed layers ring-rolled, SSM states
+    carried out of the chunk scan).  Returns (last_logits [B,V], caches)
+    ready for ``decode_step`` at position S.
+
+    ``max_seq`` sizes the full-attention caches for the generation budget.
+    """
+    assert cfg.kv_cache_dtype != "int8", \
+        "cache-collecting prefill supports bf16 caches; int8 is a decode-path option"
+    from ..sharding.context import constrain_batch
+    x, enc_out = _embed_inputs(params, batch, cfg)
+    x = constrain_batch(x)
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    h, _, caches = stack_forward(params["decoder"], x, positions, cfg,
+                                 enc_out=enc_out, collect_caches=True)
+    h = rmsnorm(params["final_norm"], h[:, -1:, :], cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+
+    def pad_entry(cache, spec):
+        w = cfg.effective_window(spec, for_decode=True)
+        target = min(max_seq, w) if w > 0 else max_seq
+        out = dict(cache)
+        for key in ("k", "v"):
+            if key in cache:
+                cur = cache[key].shape[-3]
+                if cur < target:
+                    padw = [(0, 0)] * cache[key].ndim
+                    padw[-3] = (0, target - cur)
+                    out[key] = jnp.pad(cache[key], padw)
+                elif cur > target:   # S > max_seq budget: keep ring tail
+                    out[key] = cache[key][..., -target:, :, :]
+        return out
+
+    caches = {
+        "entries": [pad_entry(c, spec)
+                    for c, spec in zip(caches["entries"], cfg.pattern)],
+        "rem": [pad_entry(c, spec)
+                for c, spec in zip(caches["rem"], cfg.remainder)],
+        "pos": caches["pos"],
+    }
+    return logits[:, 0, :], caches
+
+
+def decode_step(params, token, caches, cfg: ModelConfig):
+    """token: [B,1] i32. Returns (logits [B,V], new caches)."""
+    pos = caches["pos"]
+    x = embed(params["embed"], token, cfg)
+    h, new_caches = stack_decode(params["decoder"], x, caches, pos, cfg)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params["embed"], h, cfg)
+    return logits[:, 0, :], new_caches

@@ -1,0 +1,115 @@
+"""Top-k Mixture-of-Experts layer (OLMoE 64e/top-8, Grok-1 8e/top-2).
+
+Baseline dispatch = capacity-bounded *expert-choice gather*: each expert
+takes its top-C tokens by router score (C = k·T/E·capacity_factor), gathered
+with a batched ``take``, processed with a batched matmul, and combined with a
+scatter-add.  This is pure SPMD-friendly (no shard_map) and is the
+paper-faithful baseline; the §Perf hillclimb replaces it with a shard_map
+all-to-all dispatch for expert parallelism.
+
+Sharding: experts over the ``model`` mesh axis when E % model_size == 0
+(olmoe), expert-tensor-parallel (d_ff over ``model``) otherwise (grok).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import dense_init, split_tree
+
+
+def init_moe(key, cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.storage_dtype
+    ks = split_tree(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), dt),
+        "w_in": dense_init(ks[1], (e, d, f), dt, in_axis=1),
+        "w_out": dense_init(ks[2], (e, f, d), dt, in_axis=1),
+    }
+    if cfg.activation == "swiglu":
+        p["w_gate"] = dense_init(ks[3], (e, d, f), dt, in_axis=1)
+    return p
+
+
+def _capacity(cfg: ModelConfig, t: int) -> int:
+    c = int(cfg.num_experts_per_tok * t * cfg.capacity_factor) // cfg.num_experts
+    # keep MXU-aligned and positive, never above the token count
+    return max(1, min(t, max(8, (c // 8) * 8)))
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar f32).
+
+    Long sequences are processed in token chunks via ``lax.scan`` so the
+    [E, C, ·] dispatch/hidden buffers stay bounded (per-chunk capacity —
+    the [E, 327k, d_ff] f32 hidden buffer at 1M-token prefill was the
+    largest allocation in the grok-1 baseline)."""
+    if cfg.moe_impl == "ep":
+        from ..sharding.context import get_active_mesh
+        mesh = get_active_mesh()
+        if mesh is not None and "model" in mesh.shape \
+                and cfg.num_experts % mesh.shape["model"] == 0:
+            n_shards = 1
+            for v in mesh.shape.values():
+                n_shards *= v
+            if (x.shape[0] * x.shape[1]) % n_shards == 0:
+                from .moe_ep import moe_forward_ep
+                return moe_forward_ep(p, x, cfg, mesh)
+            # too few tokens to shard over every axis (decode) — fall back
+    b, s, d = x.shape
+    t = b * s
+    chunk = cfg.moe_chunk_tokens
+    if chunk and t > chunk and t % chunk == 0:
+        n = t // chunk
+        xc = x.reshape(n, chunk, d)
+
+        def body(_, xt_chunk):
+            y, aux = _moe_tokens(p, xt_chunk, cfg)
+            return None, (y, aux)
+
+        _, (ys, auxs) = jax.lax.scan(body, None, xc)
+        return ys.reshape(b, s, d), jnp.mean(auxs)
+    y, aux = _moe_tokens(p, x.reshape(t, d), cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_tokens(p, xt, cfg: ModelConfig):
+    """xt: [T,D] -> (y [T,D], aux scalar)."""
+    dt = cfg.compute_dtype
+    t, d = xt.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+
+    logits = (xt @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                     # [T,E]
+    gate_k, _ = jax.lax.top_k(probs, k)                         # [T,k]
+    thresh = gate_k[:, -1:]                                     # k-th largest
+    is_topk = probs >= thresh                                   # [T,E]
+    gates = jnp.where(is_topk, probs, 0.0)
+    gates = gates / (jnp.sum(gates, -1, keepdims=True) + 1e-9)  # renormalize
+
+    # load-balance auxiliary loss (Switch-style)
+    frac_tokens = jnp.mean(is_topk.astype(jnp.float32), axis=0)  # [E]
+    mean_prob = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * mean_prob)
+
+    # expert-choice gather: every expert takes its top-C tokens
+    cap = _capacity(cfg, t)
+    score_et = jnp.where(is_topk, probs, -1.0).T                # [E,T]
+    top_scores, idx = jax.lax.top_k(score_et, cap)              # [E,C]
+    valid = (top_scores > 0.0).astype(jnp.float32)              # dropped slots
+    gsel = jnp.take_along_axis(gates.T, idx, axis=1) * valid    # [E,C]
+
+    xe = jnp.take(xt, idx.reshape(-1), axis=0).reshape(e, cap, d)  # [E,C,D]
+    if cfg.activation == "swiglu":
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(dt))) \
+            * jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(dt)))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))   # [E,C,D]
+    ye = ye * gsel[..., None].astype(dt)
+
+    out = jnp.zeros((t, d), dt).at[idx.reshape(-1)].add(
+        ye.reshape(e * cap, d), mode="drop")
+    return out, aux

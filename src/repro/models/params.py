@@ -1,0 +1,56 @@
+"""Minimal pure-pytree parameter system (no flax dependency).
+
+Parameters are nested dicts of ``jnp`` arrays.  Initializers are explicit
+functions taking a PRNG key; every module exposes ``init_*`` and a pure
+``apply``-style function.  Compute casts storage-dtype params to the config's
+compute dtype at use sites.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, shape, dtype, in_axis: int = 0) -> jax.Array:
+    """LeCun-normal style init with fan-in along ``in_axis``."""
+    fan_in = shape[in_axis]
+    std = 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype) -> jax.Array:
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+def zeros_init(_key, shape, dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(_key, shape, dtype) -> jax.Array:
+    return jnp.ones(shape, dtype)
+
+
+def split_tree(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def cast(tree, dtype):
+    """Cast all floating arrays in a pytree to ``dtype``."""
+    def _c(x):
+        if isinstance(x, jax.Array) and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+    return jax.tree_util.tree_map(_c, tree)
+
+
+def param_count(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))
+
+
+def param_bytes(tree) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,291 @@
+"""Layer-stack assembly: pattern-group scan over heterogeneous blocks.
+
+The layer stack is ``num_groups`` repetitions of ``cfg.pattern`` plus an
+unrolled remainder.  Per-entry parameters are stacked over the group axis and
+consumed by a single ``lax.scan``; within a group the (≤6) pattern entries are
+unrolled.  This keeps lowered-HLO size O(pattern) instead of O(num_layers) —
+essential for compiling 96-layer / 340B configs on the 1-core dry-run host.
+
+Zamba2-style ``SHARED_ATTN`` entries use two alternating parameter sets shared
+across groups (selected by group parity inside the scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import ssm
+from .config import ATTN, CROSS, MAMBA, MOE, SHARED_ATTN, BlockSpec, ModelConfig
+from .layers import init_mlp, init_rmsnorm, mlp, rmsnorm
+from .moe import init_moe, moe_forward
+from .params import split_tree
+
+
+# ---------------------------------------------------------------------------
+# single-block init / forward
+# ---------------------------------------------------------------------------
+def init_block(key, spec: BlockSpec, cfg: ModelConfig):
+    d, dt = cfg.d_model, cfg.storage_dtype
+    ks = split_tree(key, 6)
+    if spec.kind == SHARED_ATTN:
+        return {}  # params live in the shared slot
+    if spec.kind == MAMBA:
+        return {"ln1": init_rmsnorm(ks[0], d, dt),
+                "mamba": ssm.init_mamba(ks[1], cfg)}
+    p = {"ln1": init_rmsnorm(ks[0], d, dt),
+         "attn": attn.init_attention(ks[1], cfg),
+         "ln2": init_rmsnorm(ks[2], d, dt)}
+    if spec.kind == MOE:
+        p["ffn"] = init_moe(ks[3], cfg)
+    else:
+        p["ffn"] = init_mlp(ks[3], cfg)
+    if spec.kind == CROSS:
+        p["lnx"] = init_rmsnorm(ks[4], d, dt)
+        p["xattn"] = attn.init_attention(ks[5], cfg)
+    return p
+
+
+def init_shared_block(key, cfg: ModelConfig):
+    """Two alternating Zamba2 shared attention+MLP blocks, stacked on axis 0."""
+    ks = split_tree(key, 2)
+    spec = BlockSpec(kind=ATTN, window=0)
+    both = [init_block(k, spec, cfg) for k in ks]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *both)
+
+
+def _ffn_apply(p, spec, h, cfg):
+    if spec.kind == MOE:
+        return moe_forward(p["ffn"], h, cfg)
+    return mlp(p["ffn"], h, cfg), jnp.float32(0.0)
+
+
+def _ring_cache(k, v, window: int):
+    """Convert full-sequence K/V into the decode ring-buffer layout:
+    last ``window`` entries rolled so slot = pos % window."""
+    s = k.shape[1]
+    if window <= 0 or s <= window:
+        return k, v
+    shift = s % window
+    k = jnp.roll(k[:, -window:], shift, axis=1)
+    v = jnp.roll(v[:, -window:], shift, axis=1)
+    return k, v
+
+
+def block_forward(p, spec: BlockSpec, x, positions, cfg: ModelConfig,
+                  shared=None, group_idx=None, enc_out=None, causal=True,
+                  collect=False):
+    """Full-sequence block application. Returns (x, aux_loss[, cache])."""
+    if spec.kind == SHARED_ATTN:
+        p = jax.tree_util.tree_map(lambda a: a[group_idx % 2], shared)
+        spec = BlockSpec(kind=ATTN, window=spec.window)
+    if spec.kind == MAMBA:
+        out = ssm.mamba_forward(p["mamba"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                cfg, return_cache=collect)
+        if collect:
+            out, cache = out
+            return x + out, jnp.float32(0.0), cache
+        return x + out, jnp.float32(0.0)
+    h, (k_self, v_self) = attn.attention(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps), positions, spec.window,
+        cfg, causal=causal)
+    x = x + h
+    cache = None
+    if collect:
+        w = cfg.effective_window(spec, for_decode=True)
+        kc, vc = _ring_cache(k_self, v_self, w)
+        cache = {"k": kc, "v": vc}
+    if spec.kind == CROSS:
+        q_in = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        kx, vx = _cross_kv(p["xattn"], enc_out, cfg)
+        h, _ = attn.attention(p["xattn"], q_in, positions, 0, cfg,
+                              causal=False, kv_override=(kx, vx))
+        x = x + h
+        if collect:
+            cache["xk"], cache["xv"] = kx, vx
+    f, aux = _ffn_apply(p, spec, rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    if collect:
+        return x + f, aux, cache
+    return x + f, aux
+
+
+def _cross_kv(p, enc_out, cfg):
+    dt = cfg.compute_dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(dt))
+    return k, v
+
+
+def block_decode(p, spec: BlockSpec, x, cache, pos, cfg: ModelConfig,
+                 shared=None, group_idx=None):
+    """One-token block step. Returns (x, new_cache)."""
+    if spec.kind == SHARED_ATTN:
+        p = jax.tree_util.tree_map(lambda a: a[group_idx % 2], shared)
+        spec = BlockSpec(kind=ATTN, window=spec.window)
+    if spec.kind == MAMBA:
+        h, new = ssm.mamba_decode_step(p["mamba"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                       cache, cfg)
+        return x + h, new
+    self_cache = {k: v for k, v in cache.items() if k not in ("xk", "xv")}
+    h, new_self = attn.attn_decode(p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+                                   self_cache, pos, cfg)
+    x = x + h
+    new = dict(cache)
+    new.update(new_self)
+    if spec.kind == CROSS:
+        q_in = rmsnorm(p["lnx"], x, cfg.norm_eps)
+        h, _ = attn.attn_decode(p["xattn"], q_in, None, pos, cfg,
+                                kv_override=(cache["xk"], cache["xv"]))
+        x = x + h
+    f, _ = _ffn_apply(p, spec, rmsnorm(p["ln2"], x, cfg.norm_eps), cfg)
+    return x + f, new
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ModelConfig, spec: BlockSpec, batch: int, seq_len: int,
+                     enc_len: int = 0, prefix=()):
+    if spec.kind == MAMBA:
+        return ssm.init_ssm_cache(cfg, batch, prefix_shape=prefix)
+    w = cfg.effective_window(spec, for_decode=True)
+    c = attn.init_kv_cache(cfg, batch, seq_len, w, prefix_shape=prefix)
+    if spec.kind == CROSS:
+        dt = cfg.compute_dtype
+        c["xk"] = jnp.zeros(prefix + (batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dt)
+        c["xv"] = jnp.zeros_like(c["xk"])
+    return c
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, seq_len: int, enc_len: int = 0):
+    g = cfg.num_groups
+    return {
+        "entries": [init_block_cache(cfg, s, batch, seq_len, enc_len, prefix=(g,))
+                    for s in cfg.pattern],
+        "rem": [init_block_cache(cfg, s, batch, seq_len, enc_len)
+                for s in cfg.remainder],
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# stack init / forward
+# ---------------------------------------------------------------------------
+def init_stack(key, cfg: ModelConfig, pattern=None, num_layers=None):
+    pattern = pattern or cfg.pattern
+    nl = num_layers or cfg.num_layers
+    g, p_len = nl // len(pattern), len(pattern)
+    rem = pattern[:nl - g * p_len]
+    ks = split_tree(key, p_len + len(rem) + 1)
+    entries = []
+    for i, spec in enumerate(pattern):
+        gk = split_tree(ks[i], g)
+        per = [init_block(k, spec, cfg) for k in gk]
+        entries.append(jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per)
+                       if per[0] else {})
+    params = {"entries": entries,
+              "rem": [init_block(ks[p_len + i], s, cfg) for i, s in enumerate(rem)]}
+    if any(s.kind == SHARED_ATTN for s in pattern):
+        params["shared"] = init_shared_block(ks[-1], cfg)
+    return params
+
+
+def _tree_index(tree, i):
+    return jax.tree_util.tree_map(lambda a: a[i], tree)
+
+
+def stack_forward(params, x, positions, cfg: ModelConfig, pattern=None,
+                  enc_out=None, causal=True, collect_caches=False):
+    """Full-sequence stack. Returns (x, total_aux) or, with
+    ``collect_caches``, (x, total_aux, caches) where caches matches
+    ``init_stack_cache`` layout primed at position S."""
+    pattern = pattern or cfg.pattern
+    shared = params.get("shared")
+    # group count derives from stacked leading dim (robust to custom stacks)
+    leaves = jax.tree_util.tree_leaves(params["entries"])
+    g = leaves[0].shape[0] if leaves else 0
+
+    from ..sharding.context import constrain_batch
+
+    def group_body(carry, xs):
+        xc, aux = carry
+        gi, entry_params = xs
+        caches = []
+        for i, spec in enumerate(pattern):
+            out = block_forward(entry_params[i], spec, xc, positions, cfg,
+                                shared=shared, group_idx=gi, enc_out=enc_out,
+                                causal=causal, collect=collect_caches)
+            if collect_caches:
+                xc, a, cache = out
+                caches.append(cache)
+            else:
+                xc, a = out
+            aux = aux + a
+        # pin the residual-carry sharding at the scan boundary (where the
+        # remat residual is saved) — SPMD otherwise drops batch sharding.
+        # seq_shard_activations additionally shards the carry's seq dim over
+        # the model axis (Megatron sequence parallelism): residuals shrink
+        # by model_size at the cost of per-group all-gather/reduce-scatter.
+        sd = 1 if cfg.seq_shard_activations else None
+        return (constrain_batch(xc, seq_dim=sd), aux), \
+            (caches if collect_caches else None)
+
+    body = jax.checkpoint(group_body) if (cfg.remat and not collect_caches) \
+        else group_body
+    entry_caches = []
+    if g:
+        (x, aux), ys = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                                    (jnp.arange(g), params["entries"]))
+        if collect_caches:
+            entry_caches = ys
+    else:
+        aux = jnp.float32(0.0)
+    rem_specs = pattern[:len(params["rem"])]
+    rem_caches = []
+    for i, spec in enumerate(rem_specs):
+        out = block_forward(params["rem"][i], spec, x, positions, cfg,
+                            shared=shared, group_idx=g, enc_out=enc_out,
+                            causal=causal, collect=collect_caches)
+        if collect_caches:
+            x, a, cache = out
+            rem_caches.append(cache)
+        else:
+            x, a = out
+        aux = aux + a
+    if collect_caches:
+        caches = {"entries": entry_caches, "rem": rem_caches,
+                  "pos": jnp.asarray(x.shape[1], jnp.int32)}
+        return x, aux, caches
+    return x, aux
+
+
+def stack_decode(params, x, caches, pos, cfg: ModelConfig, pattern=None):
+    """One-token step through the whole stack. Returns (x, new_caches)."""
+    pattern = pattern or cfg.pattern
+    shared = params.get("shared")
+    leaves = jax.tree_util.tree_leaves(params["entries"])
+    g = leaves[0].shape[0] if leaves else 0
+
+    def group_body(xc, xs):
+        gi, entry_params, entry_caches = xs
+        new_caches = []
+        for i, spec in enumerate(pattern):
+            xc, nc = block_decode(entry_params[i], spec, xc, entry_caches[i],
+                                  pos, cfg, shared=shared, group_idx=gi)
+            new_caches.append(nc)
+        return xc, new_caches
+
+    if g:
+        x, new_entries = jax.lax.scan(
+            group_body, x, (jnp.arange(g), params["entries"], caches["entries"]))
+    else:
+        new_entries = caches["entries"]
+    new_rem = []
+    rem_specs = pattern[:len(params["rem"])]
+    for i, spec in enumerate(rem_specs):
+        x, nc = block_decode(params["rem"][i], spec, x, caches["rem"][i], pos,
+                             cfg, shared=shared, group_idx=g)
+        new_rem.append(nc)
+    return x, {"entries": new_entries, "rem": new_rem, "pos": pos + 1}

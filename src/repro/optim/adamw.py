@@ -1,0 +1,98 @@
+"""AdamW with per-tensor dtype policies and global-norm clipping.
+
+No optax dependency: pure-pytree implementation.  ``moment_dtype`` lets the
+340B-class configs keep first/second moments in bf16 so the optimizer state
+fits the 16 GB/chip HBM budget (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+    # Leaves larger than this (bytes) with a leading stack axis get their
+    # update scanned over that axis.  §Perf iter-3 verdict: REFUTED — the
+    # scan stages copies of (g, mu, nu, p) into the loop, costing more than
+    # the temps it saves (nemotron 30.3 → 47.1 GiB).  Kept for the record;
+    # leave 0.
+    chunked_update_bytes: int = 0     # 0 = disabled
+    # §Perf iter-4: run the update math in the moment dtype instead of f32
+    # (halves the elementwise temps when moments are bf16; the weight
+    # update itself still applies in f32 master precision).
+    update_in_moment_dtype: bool = False
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"mu": jax.tree_util.tree_map(zeros, params),
+            "nu": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig,
+                 lr_scale=1.0) -> Tuple[Any, Dict]:
+    """Returns (new_params, new_opt_state)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else 1.0
+    mdt = jnp.dtype(cfg.moment_dtype)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd_math(g, mu, nu, p):
+        wdt = mdt if cfg.update_in_moment_dtype else jnp.float32
+        gw = g.astype(wdt) * jnp.asarray(scale, wdt)
+        muw = (jnp.asarray(cfg.b1, wdt) * mu.astype(wdt)
+               + jnp.asarray(1 - cfg.b1, wdt) * gw)
+        nuw = (jnp.asarray(cfg.b2, wdt) * nu.astype(wdt)
+               + jnp.asarray(1 - cfg.b2, wdt) * gw * gw)
+        step = (muw / b1c.astype(wdt)) / (jnp.sqrt(nuw / b2c.astype(wdt))
+                                          + jnp.asarray(cfg.eps, wdt))
+        step = step + jnp.asarray(cfg.weight_decay, wdt) * p.astype(wdt)
+        newp = p.astype(jnp.float32) - lr * step.astype(jnp.float32)
+        return newp.astype(p.dtype), muw.astype(mdt), nuw.astype(mdt)
+
+    def upd(g, mu, nu, p):
+        big = (cfg.chunked_update_bytes
+               and p.ndim >= 2 and p.shape[0] >= 8
+               and p.size * 4 >= cfg.chunked_update_bytes)
+        if not big:
+            return upd_math(g, mu, nu, p)
+        # scan the update over the leading (layer-stack) axis: f32 temps
+        # shrink by the stack size
+        def body(_, xs):
+            return None, upd_math(*xs)
+        _, (newp, mu2, nu2) = jax.lax.scan(body, None, (g, mu, nu, p))
+        return newp, mu2, nu2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, mu, nu, p) for g, mu, nu, p
+           in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}

@@ -1,0 +1,64 @@
+"""Active-mesh context for intra-jit sharding constraints.
+
+XLA SPMD propagation loses the batch sharding through the microbatch
+reshape and the layer-scan carry (observed in the dry-run HLO: fully
+replicated [B,S,·] activations).  Model/step code calls ``constrain`` at the
+seams; outside a mesh context (unit tests, single-device runs) it is a
+no-op, so the model code stays backend-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE
+    _ACTIVE = mesh
+
+
+def get_active_mesh() -> Optional[Mesh]:
+    return _ACTIVE
+
+
+def batch_axis_names():
+    if _ACTIVE is None:
+        return ()
+    return tuple(a for a in ("pod", "data") if a in _ACTIVE.shape)
+
+
+def _axes_size(axes) -> int:
+    n = 1
+    for a in axes:
+        n *= _ACTIVE.shape[a]
+    return n
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint against the active mesh (no-op without one)."""
+    if _ACTIVE is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_ACTIVE, spec))
+
+
+def constrain_batch(x, batch_dim: int = 0, vocab_dim: Optional[int] = None,
+                    seq_dim: Optional[int] = None):
+    """Shard ``batch_dim`` over (pod, data) when divisible; optionally shard
+    ``vocab_dim`` (logits) or ``seq_dim`` (Megatron-style sequence-parallel
+    residual stream) over model."""
+    if _ACTIVE is None:
+        return x
+    ax = batch_axis_names()
+    if not ax or x.shape[batch_dim] % _axes_size(ax):
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = ax if len(ax) > 1 else ax[0]
+    for extra in (vocab_dim, seq_dim):
+        if extra is not None and "model" in _ACTIVE.shape \
+                and x.shape[extra] % _ACTIVE.shape["model"] == 0:
+            spec[extra] = "model"
+    return constrain(x, P(*spec))

@@ -1,0 +1,219 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+Scheme (DESIGN.md §5): 2D "FSDP × TP" — weights sharded over BOTH the
+``data`` axis (FSDP dim) and the ``model`` axis (TP dim); batch over
+(``pod``, ``data``).  XLA SPMD inserts the per-layer all-gathers.
+
+Rules are name-based on the *trailing* dims of each leaf; extra leading dims
+(the scan group axis G, the 2-stack of Zamba2 shared blocks) are padded with
+``None``.  Dims not divisible by the mesh-axis size fall back per rule (e.g.
+KV heads < model size shard head_dim instead — GQA fallback).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    total = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return False
+        total *= mesh.shape[a]
+    return n % total == 0
+
+
+def default_fsdp_axis(mesh: Mesh):
+    """FSDP dim spans (pod, data) when a pod axis exists — sharding the
+    340B-class parameter/optimizer state across pods instead of
+    replicating it (§Perf iter-5)."""
+    return ("pod", "data") if "pod" in mesh.shape else "data"
+
+
+def _attn_kv_spec(shape, mesh, fsdp) -> P:
+    """wk/wv [D, KV, hd]: shard KV if divisible, else head_dim."""
+    if _div(shape[1], mesh, "model"):
+        return P(fsdp, "model", None)
+    if _div(shape[2], mesh, "model"):
+        return P(fsdp, None, "model")
+    return P(fsdp, None, None)
+
+
+def _rule(name: str, shape, mesh: Mesh, fsdp: Optional[str]) -> P:
+    md = "model" if "model" in mesh.shape else None
+    if name in ("embedding", "unembed"):
+        # [V, D] / [D, V] — vocab over model
+        big = 0 if shape[0] > shape[1] else 1
+        spec = [fsdp, fsdp]
+        spec[big] = md if _div(shape[big], mesh, "model") else None
+        return P(*spec)
+    if name == "wq":
+        return P(fsdp, md if _div(shape[1], mesh, "model") else None, None)
+    if name in ("wk", "wv"):
+        return _attn_kv_spec(shape, mesh, fsdp)
+    if name == "wo":
+        return P(md if _div(shape[0], mesh, "model") else None, None, fsdp)
+    if name in ("w_in", "w_gate"):
+        if len(shape) == 3:   # moe [E, D, F]
+            if _div(shape[0], mesh, "model"):
+                return P("model", fsdp, None)
+            return P(None, fsdp, md if _div(shape[2], mesh, "model") else None)
+        return P(fsdp, md if _div(shape[1], mesh, "model") else None)
+    if name == "w_out":
+        if len(shape) == 3:   # moe [E, F, D]
+            if _div(shape[0], mesh, "model"):
+                return P("model", None, fsdp)
+            return P(None, md if _div(shape[1], mesh, "model") else None, fsdp)
+        return P(md if _div(shape[0], mesh, "model") else None, fsdp)
+    if name == "router":
+        return P(fsdp, None)
+    if name == "in_proj":      # mamba [D, Z]
+        return P(fsdp, md if _div(shape[1], mesh, "model") else None)
+    if name == "out_proj":     # mamba [din, D]
+        return P(md if _div(shape[0], mesh, "model") else None, fsdp)
+    if name in ("conv_w", "conv_b"):
+        return P(*([None] * (len(shape) - 1)
+                   + [md if _div(shape[-1], mesh, "model") else None]))
+    if name in ("A_log", "D", "dt_bias", "out_norm"):
+        return P(md if _div(shape[-1], mesh, "model") else None)
+    # norms / scales / biases / classifier leaves: replicate
+    return P(*([None] * len(shape)))
+
+
+def _path_keys(path):
+    out = []
+    for k in path:
+        kk = getattr(k, "key", None)
+        if kk is None:
+            kk = getattr(k, "idx", k)
+        out.append(kk)
+    return out
+
+
+def param_spec(path, leaf, mesh: Mesh, fsdp_axis: Optional[str] = "data") -> P:
+    """Spec for one leaf given its tree path (tuple of keys).
+
+    Leaves under "entries"/"shared"/"encoder" stacks carry one leading
+    group/stack dim which the name-based rules must not see — it is stripped
+    before rule lookup and re-padded with ``None``."""
+    keys = _path_keys(path)
+    name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+    stacked = any(k in ("entries", "shared") for k in keys)
+    shape = leaf.shape
+    core = shape[1:] if (stacked and len(shape) > 1) else shape
+    base = _rule(name, core, mesh, fsdp_axis)
+    pad = len(shape) - len(base)
+    if pad >= 0:
+        base = P(*([None] * pad + list(base)))
+    else:  # rule longer than actual rank (e.g. scalar) — replicate
+        base = P(*([None] * len(shape)))
+    # divisibility guard: drop axes that don't divide the dim evenly
+    fixed = [ax if _div(dim, mesh, ax) else None
+             for dim, ax in zip(shape, tuple(base))]
+    return P(*fixed)
+
+
+def params_shardings(params, mesh: Mesh, fsdp_axis="auto"):
+    """NamedSharding tree matching ``params``.  fsdp_axis: "auto" (span
+    (pod, data)), an explicit axis/tuple, or None for TP-only layouts."""
+    if fsdp_axis == "auto":
+        fsdp_axis = default_fsdp_axis(mesh)
+    def spec(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, mesh, fsdp_axis))
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh):
+    """Mesh axes carrying the batch dim."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(mesh: Mesh, ndim: int = 2) -> P:
+    return P(batch_axes(mesh), *([None] * (ndim - 1)))
+
+
+def batch_shardings(batch, mesh: Mesh):
+    def spec(leaf):
+        b = leaf.shape[0]
+        ax = batch_axes(mesh)
+        total = 1
+        for a in ax:
+            total *= mesh.shape[a]
+        if b % total == 0:
+            return NamedSharding(mesh, P(ax, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def cache_spec(path, leaf, mesh: Mesh) -> P:
+    """KV/SSM cache sharding: batch over data(+pod), heads/channels over model.
+
+    Trailing-dim layouts:
+      attn k/v   [..., B, C, KV, hd]
+      ssm state  [..., B, H, P, N]
+      ssm conv   [..., B, cw-1, channels]
+    """
+    name = None
+    for k in reversed(path):
+        kk = getattr(k, "key", getattr(k, "idx", k))
+        if isinstance(kk, str):
+            name = kk
+            break
+    ax = batch_axes(mesh)
+    shape = leaf.shape
+    if name in ("k_scale", "v_scale") and len(shape) >= 3:
+        # int8-KV scales [..., B, C, KV]: batch over data, else seq
+        b_ax = _bd(shape[-3], mesh, ax)
+        seq_ax = None if b_ax is not None else _bd(shape[-2], mesh, ax)
+        base = [b_ax, seq_ax, None]
+    elif name in ("k", "v", "xk", "xv") and len(shape) >= 4:
+        kv, hd = shape[-2], shape[-1]
+        head_ax = "model" if _div(kv, mesh, "model") else None
+        b_ax = _bd(shape[-4], mesh, ax)
+        # batch=1 long-context decode: shard the cache SEQ dim over the data
+        # axes instead (§Perf: gemma2/zamba2 long_500k KV residency)
+        seq_ax = None if b_ax is not None else _bd(shape[-3], mesh, ax)
+        if head_ax is None and seq_ax is None and _div(shape[-3], mesh, "model"):
+            # GQA kv-heads don't divide TP: flash-decoding-style seq-sharding
+            # over model beats hd-sharding (which all-reduces the scores)
+            seq_ax = "model"
+        model_used = (head_ax == "model") or (seq_ax == "model")
+        hd_ax = "model" if (not model_used and _div(hd, mesh, "model")) \
+            else None
+        base = [b_ax, seq_ax, head_ax, hd_ax]
+    elif name == "state" and len(shape) >= 4:
+        base = [_bd(shape[-4], mesh, ax),
+                "model" if _div(shape[-3], mesh, "model") else None, None, None]
+    elif name == "conv" and len(shape) >= 3:
+        base = [_bd(shape[-3], mesh, ax), None,
+                "model" if _div(shape[-1], mesh, "model") else None]
+    else:
+        base = [None] * len(shape)
+    pad = len(shape) - len(base)
+    return P(*([None] * pad + base))
+
+
+def _bd(b: int, mesh: Mesh, ax):
+    total = 1
+    for a in ax:
+        total *= mesh.shape[a]
+    return ax if (total and b % total == 0) else None
+
+
+def cache_shardings(caches, mesh: Mesh):
+    def spec(path, leaf):
+        return NamedSharding(mesh, cache_spec(path, leaf, mesh))
+    return jax.tree_util.tree_map_with_path(spec, caches)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,69 @@
+"""Dry-run machinery integration test on a small host-device mesh.
+
+Runs in a subprocess so the 8-device XLA flag doesn't leak into the main
+test process (smoke tests must see 1 device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    from jax.sharding import Mesh
+    import numpy as np
+
+    from repro.configs import get_config, smoke_variant
+    from repro.launch import dryrun as dr
+    from repro.launch.specs import SHAPES, InputShape
+    from repro.sharding.context import set_active_mesh
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    set_active_mesh(mesh)
+
+    # tiny shape + smoke config through the real build/lower/compile path
+    import repro.launch.specs as specs
+    shape = InputShape("tiny_train", seq_len=32, global_batch=8, mode="train")
+    specs.SHAPES["tiny_train"] = shape
+    dshape = InputShape("tiny_decode", seq_len=64, global_batch=8, mode="decode")
+    specs.SHAPES["tiny_decode"] = dshape
+
+    import repro.configs as C
+    real_get = C.get_config
+    def patched(arch):
+        return smoke_variant(real_get(arch))
+    dr.get_config = patched
+
+    out = {}
+    for arch in ("gemma2-9b", "olmoe-1b-7b", "zamba2-2.7b"):
+        for shp in ("tiny_train", "tiny_decode"):
+            fn, args, in_sh, out_sh, donate, meta = dr.build_lowerable(
+                arch, shp, mesh)
+            compiled = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                               donate_argnums=donate).lower(*args).compile()
+            mem = compiled.memory_analysis()
+            coll = dr.collective_stats(compiled.as_text())
+            out[f"{arch}/{shp}"] = {
+                "temp": int(mem.temp_size_in_bytes),
+                "coll": int(coll["total_bytes"]),
+            }
+    print(json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh_lowers_and_compiles():
+    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "XLA_FLAGS": "--xla_force_host_platform_device_count=8"},
+                       cwd=".", timeout=900)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert len(out) == 6
+    for k, v in out.items():
+        assert v["temp"] > 0, k
+    # sharded training must actually communicate
+    assert out["gemma2-9b/tiny_train"]["coll"] > 0

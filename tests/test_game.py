@@ -1,0 +1,186 @@
+"""Stackelberg game + Dinkelbach unit & property tests (paper §IV–V)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import noise_power, sample_channel_gains, sample_positions
+from repro.core.dinkelbach import dinkelbach_power, successive_power
+from repro.core.stackelberg import (GameConfig, equilibrium, follower_alpha,
+                                    leader_f, local_compute_energy,
+                                    local_compute_latency)
+
+CFG = GameConfig()
+
+
+def _channels(seed, n=5):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    h2 = sample_channel_gains(k2, sample_positions(k1, n))
+    return jnp.sort(h2)[::-1]
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1 (follower)
+# ---------------------------------------------------------------------------
+def test_follower_equal_finish_times():
+    """Theorem 1: optimal alpha equalizes DT compute times."""
+    c, f_s = 1e7, 100e9
+    d_hat = jnp.array([50., 120., 300., 10., 77.])
+    for t_total in (0.001, 0.01, 1.0):
+        alpha, t_s = follower_alpha(c, d_hat, t_total, f_s)
+        t_n = c * d_hat / (alpha * f_s)
+        assert jnp.allclose(t_n, t_n[0], rtol=1e-5), t_n
+        assert float(jnp.sum(alpha)) <= 1.0 + 1e-6
+
+
+def test_follower_case1_no_waste():
+    """Server slack ⇒ t_S = t_total exactly (Eq. 26), Σα < 1."""
+    alpha, t_s = follower_alpha(1e7, jnp.array([10., 20.]), 1.0, 100e9)
+    assert abs(float(t_s) - 1.0) < 1e-9
+    t_n = 1e7 * jnp.array([10., 20.]) / (alpha * 100e9)
+    assert jnp.allclose(t_n, 1.0)
+    assert float(jnp.sum(alpha)) < 1.0
+
+
+def test_follower_case2_saturated():
+    """Overload ⇒ Σα = 1 (Eq. 29) and t_S > t_total."""
+    d_hat = jnp.array([4000., 8000.])
+    alpha, t_s = follower_alpha(1e7, d_hat, 0.5, 100e9)
+    assert abs(float(jnp.sum(alpha)) - 1.0) < 1e-6
+    assert float(t_s) > 0.5
+
+
+@given(st.lists(st.floats(1.0, 1e4), min_size=2, max_size=8),
+       st.floats(1e-3, 10.0))
+@settings(max_examples=30, deadline=None)
+def test_follower_alpha_properties(d_hat_list, t_total):
+    """Property: α ≥ 0, Σα ≤ 1, equal finish times — for any loads."""
+    d_hat = jnp.array(d_hat_list)
+    alpha, t_s = follower_alpha(1e7, d_hat, t_total, 100e9)
+    assert bool(jnp.all(alpha >= 0))
+    assert float(jnp.sum(alpha)) <= 1.0 + 1e-5
+    t_n = 1e7 * d_hat / (jnp.maximum(alpha, 1e-12) * 100e9)
+    assert float(jnp.max(t_n) - jnp.min(t_n)) < 1e-4 * float(jnp.max(t_n)) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# leader closed forms
+# ---------------------------------------------------------------------------
+def test_leader_f_runs_to_deadline():
+    """f̃ hits the latency budget exactly when above f_min (§V-B-2)."""
+    c, v, d = 1e7, 0.4, 1000.0
+    a_n = 2.0
+    f = leader_f(c, v, d, a_n, 1e9, 10e9)
+    t = local_compute_latency(c, v, d, f)
+    assert abs(float(t) - a_n) < 1e-6 or float(f) in (1e9, 10e9)
+
+
+def test_leader_f_floor():
+    f = leader_f(1e7, 0.9, 10.0, 5.0, 1e9, 10e9)
+    assert float(f) == pytest.approx(1e9)   # f̃ tiny ⇒ floor at f_min
+
+
+def test_energy_monotone_in_v():
+    """Eq. (6): larger DT mapping ratio ⇒ lower local-compute energy —
+    the reason v* = v_max."""
+    es = [float(local_compute_energy(1e7, v, 500.0, 2e9)) for v in
+          (0.0, 0.3, 0.6, 0.9)]
+    assert es == sorted(es, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# Dinkelbach (Algorithm 1)
+# ---------------------------------------------------------------------------
+def test_dinkelbach_converges_and_is_optimal():
+    """q* matches a dense grid search of R/U (global optimum)."""
+    f_eff, d, g, bw = 1e13, 1e6, 5.0, 1e6
+    p, q, it = dinkelbach_power(d, g, f_eff, bw, 0.01, 0.1)
+    grid = jnp.linspace(0.01, 0.1, 20001)
+    rate = bw * jnp.log2(1 + grid * f_eff)
+    feas = rate >= d / g
+    ratio = jnp.where(feas, rate / (grid * d), -jnp.inf)
+    q_grid = float(jnp.max(ratio))
+    assert float(q) == pytest.approx(q_grid, rel=1e-3)
+    assert int(it) <= 20
+
+
+def test_dinkelbach_kkt_matches_projected():
+    """Paper-faithful subgradient inner solver ≡ projected closed form."""
+    f_eff, d, g, bw = 3e12, 1e6, 4.0, 1e6
+    p1, q1, _ = dinkelbach_power(d, g, f_eff, bw, 0.01, 0.1, inner="projected")
+    p2, q2, _ = dinkelbach_power(d, g, f_eff, bw, 0.01, 0.1, inner="kkt")
+    assert float(p1) == pytest.approx(float(p2), rel=1e-2)
+    assert float(q1) == pytest.approx(float(q2), rel=1e-2)
+
+
+@given(st.floats(1e11, 1e14), st.floats(0.5, 9.0))
+@settings(max_examples=25, deadline=None)
+def test_dinkelbach_respects_box(f_eff, g):
+    p, q, _ = dinkelbach_power(1e6, g, f_eff, 1e6, 0.01, 0.1)
+    assert 0.01 - 1e-9 <= float(p) <= 0.1 + 1e-9
+    assert float(q) > 0
+
+
+def test_successive_order_q_monotone_with_decoding_order():
+    """Fig. 4 structure: earlier-decoded clients see interference ⇒ their
+    rate-per-energy optimum q is (weakly) below the interference-free tail
+    client with comparable gain."""
+    h2 = jnp.array([1e-11, 1e-11, 1e-11])   # equal gains isolate SIC position
+    p, q = successive_power(h2, 1e6, 5.0, 1e6, noise_power(), 0.01, 0.1)
+    assert float(q[0]) <= float(q[-1]) + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# equilibrium (Algorithm 2)
+# ---------------------------------------------------------------------------
+def test_equilibrium_feasible_and_stable():
+    h2s = _channels(0)
+    d = jnp.array([100., 150., 200., 120., 80.])
+    vmax = jnp.full((5,), 0.5)
+    alloc = equilibrium(CFG, h2s, d, vmax)
+    assert bool(jnp.all(alloc.v == vmax))                      # v* = v_max
+    assert bool(jnp.all((alloc.p >= CFG.p_min - 1e-9)
+                        & (alloc.p <= CFG.p_max + 1e-9)))
+    assert bool(jnp.all((alloc.f >= CFG.f_min - 1) & (alloc.f <= CFG.f_max + 1)))
+    assert float(jnp.sum(alloc.alpha)) <= 1.0 + 1e-6
+    assert alloc.iterations <= 20
+
+
+def test_equilibrium_leader_optimality_vs_perturbation():
+    """Stackelberg condition (21): perturbing the leader's strategy (with the
+    follower's best response fixed) cannot reduce total energy."""
+    h2s = _channels(1)
+    d = jnp.array([100., 150., 200., 120., 80.])
+    vmax = jnp.full((5,), 0.5)
+    alloc = equilibrium(CFG, h2s, d, vmax)
+    from repro.core.stackelberg import round_metrics
+    _, t_cmp, t_com, e_cmp, e_com = round_metrics(CFG, d, alloc.v, alloc.f,
+                                                  alloc.p, h2s)
+    e_star = float(jnp.sum(e_cmp + e_com))
+    key = jax.random.PRNGKey(0)
+    feas_viol_allowed = float(jnp.max(t_cmp + t_com)) + 1e-3
+    for i in range(20):
+        kk = jax.random.fold_in(key, i)
+        dp = jax.random.uniform(kk, (5,), minval=-.02, maxval=.02)
+        p2 = jnp.clip(alloc.p + dp, CFG.p_min, CFG.p_max)
+        f2 = jnp.clip(alloc.f * (1 + jax.random.uniform(
+            jax.random.fold_in(kk, 1), (5,), minval=0.0, maxval=0.3)),
+            CFG.f_min, CFG.f_max)
+        _, t_cmp2, t_com2, e_cmp2, e_com2 = round_metrics(CFG, d, alloc.v, f2,
+                                                          p2, h2s)
+        if float(jnp.max(t_cmp2 + t_com2)) > min(CFG.t_max, feas_viol_allowed):
+            continue   # infeasible perturbation
+        e2 = float(jnp.sum(e_cmp2 + e_com2))
+        assert e2 >= e_star - 0.05 * abs(e_star), (i, e2, e_star)
+
+
+def test_wo_dt_consumes_more_energy():
+    """DT mapping strictly reduces client energy (the paper's premise)."""
+    from repro.core.stackelberg import wo_dt_allocation
+    h2s = _channels(2)
+    d = jnp.array([300., 350., 400., 320., 280.])
+    vmax = jnp.full((5,), 0.6)
+    a_dt = equilibrium(CFG, h2s, d, vmax)
+    a_wo = wo_dt_allocation(CFG, h2s, d)
+    assert float(a_dt.energy) < float(a_wo.energy)

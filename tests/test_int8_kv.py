@@ -1,0 +1,54 @@
+"""int8-quantized KV cache (opt-in, decode path) vs bf16/f32 caches.
+
+Per-(token, head) absmax scales; the test accepts the expected quantization
+noise (≈127-level rounding through softmax) but requires greedy decisions to
+be unchanged and the cache to actually be int8."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.models import decode_step, init_caches, init_params
+from repro.models.attention import _quantize_kv, dequantize_cache
+
+
+def test_quantize_roundtrip_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 1, 4, 32)) * 3.0
+    q, s = _quantize_kv(x)
+    assert q.dtype == jnp.int8
+    x2 = q.astype(jnp.float32) * s[..., None]
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert float(jnp.max(jnp.abs(x2 - x) / amax)) <= 1.0 / 127.0 + 1e-6
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "granite-3-8b"])
+def test_int8_decode_close_and_greedy_equal(arch):
+    cfg = smoke_variant(get_config(arch)).replace(dtype="float32",
+                                                  param_dtype="float32")
+    cfg8 = cfg.replace(kv_cache_dtype="int8")
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (2, 10), 0, cfg.vocab_size)
+    c1 = init_caches(cfg, 2, 16)
+    c2 = init_caches(cfg8, 2, 16)
+    leaf = c2["entries"][0]["k"]
+    assert leaf.dtype == jnp.int8
+    assert "k_scale" in c2["entries"][0]
+    l1 = l2 = None
+    for t in range(10):
+        l1, c1 = decode_step(params, toks[:, t:t + 1], c1, cfg)
+        l2, c2 = decode_step(params, toks[:, t:t + 1], c2, cfg8)
+    rel = float(jnp.max(jnp.abs(l1 - l2))) / float(jnp.max(jnp.abs(l1)))
+    assert rel < 0.15, rel                       # quantization noise bound
+    assert bool(jnp.all(jnp.argmax(l1, -1) == jnp.argmax(l2, -1)))
+
+
+def test_int8_cache_halves_residency():
+    cfg = smoke_variant(get_config("granite-3-8b"))
+    c_bf = init_caches(cfg, 2, 64)
+    c_q = init_caches(cfg.replace(kv_cache_dtype="int8"), 2, 64)
+    def nbytes(tree):
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(tree))
+    # int8 values + f32 scales ≈ (1 + 4/hd)/2 of bf16 — close to half
+    assert nbytes(c_q) < 0.6 * nbytes(c_bf)

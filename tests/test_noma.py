@@ -1,0 +1,75 @@
+"""NOMA transmission-model tests (paper §II-C), incl. the SIC capacity-region
+property: uplink SIC achieves the MAC sum capacity EXACTLY."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.channel import noise_power, sample_channel_gains, sample_positions
+from repro.core.noma import (noma_rates, oma_rates, sic_order, sum_capacity,
+                             tx_energy, tx_latency)
+
+
+def test_sic_order_descending():
+    h2 = jnp.array([3., 1., 7., 2.])
+    o = sic_order(h2)
+    assert list(h2[o]) == sorted(h2.tolist(), reverse=True)
+
+
+@given(st.lists(st.floats(1e-14, 1e-9), min_size=2, max_size=8),
+       st.lists(st.floats(0.01, 0.1), min_size=2, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_sum_rate_equals_mac_capacity(h2_list, p_list):
+    """Σ_n R_n == B·log2(1 + Σ p|h|²/σ²): SIC loses nothing (property)."""
+    n = min(len(h2_list), len(p_list))
+    h2 = jnp.sort(jnp.array(h2_list[:n]))[::-1]
+    p = jnp.array(p_list[:n])
+    rates = noma_rates(p, h2)
+    cap = sum_capacity(p, h2)
+    assert float(jnp.sum(rates)) == pytest.approx(float(cap), rel=1e-4)
+
+
+def test_last_decoded_interference_free():
+    h2 = jnp.array([1e-10, 5e-11, 2e-11])
+    p = jnp.full((3,), 0.05)
+    rates = noma_rates(p, h2)
+    expect = 1e6 * jnp.log2(1 + p[2] * h2[2] / noise_power())
+    assert float(rates[2]) == pytest.approx(float(expect), rel=1e-6)
+
+
+def test_rates_increase_with_own_power_last_client():
+    h2 = jnp.array([1e-10, 5e-11])
+    r1 = noma_rates(jnp.array([0.05, 0.02]), h2)
+    r2 = noma_rates(jnp.array([0.05, 0.08]), h2)
+    assert float(r2[1]) > float(r1[1])
+    # and raising the later-decoded client's power hurts the earlier one
+    assert float(r2[0]) < float(r1[0])
+
+
+def test_sic_power_independence_downstream():
+    """§V-B-3 premise: p_n does not affect R_m for m > n (decoded later)."""
+    h2 = jnp.array([1e-10, 5e-11, 2e-11])
+    ra = noma_rates(jnp.array([0.01, 0.05, 0.03]), h2)
+    rb = noma_rates(jnp.array([0.09, 0.05, 0.03]), h2)
+    assert jnp.allclose(ra[1:], rb[1:])
+
+
+def test_oma_vs_noma_sum_rate():
+    """NOMA ≥ OMA in sum rate for the same powers (spectral efficiency)."""
+    key = jax.random.PRNGKey(0)
+    h2 = jnp.sort(sample_channel_gains(
+        key, sample_positions(jax.random.PRNGKey(1), 5)))[::-1]
+    p = jnp.full((5,), 0.05)
+    assert float(jnp.sum(noma_rates(p, h2))) > float(jnp.sum(oma_rates(p, h2)))
+
+
+def test_latency_energy_formulas():
+    r = jnp.array([2e6])
+    t = tx_latency(1e6, r)
+    assert float(t[0]) == pytest.approx(0.5)
+    assert float(tx_energy(jnp.array([0.1]), t)[0]) == pytest.approx(0.05)
+
+
+def test_noise_power_matches_table1():
+    # −174 dBm/Hz over 1 MHz = −114 dBm ≈ 3.98e−15 W
+    assert noise_power() == pytest.approx(3.981e-15, rel=1e-3)

@@ -1,0 +1,126 @@
+"""Hypothesis property tests on system invariants (model + game layers)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aggregation import dt_aggregate, fedavg
+from repro.kernels.ref import ssd_scan_ref, swa_attention_ref
+from repro.models.ssm import ssd_chunked
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+
+# ---------------------------------------------------------------------------
+# SSD invariants
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 5), st.floats(0.3, 3.0))
+@settings(max_examples=10, deadline=None)
+def test_ssd_linear_in_x(seed, scale):
+    """y(αx) = α·y(x): the SSD map is linear in the input stream."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 16, 2, 4, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, h, n))
+    C = jax.random.normal(ks[4], (b, s, h, n))
+    y1 = ssd_chunked(x, dt, a, B, C, 4)
+    y2 = ssd_chunked(scale * x, dt, a, B, C, 4)
+    assert float(jnp.max(jnp.abs(y2 - scale * y1))) < 1e-3 * max(1.0, scale)
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=8, deadline=None)
+def test_ssd_causality(seed):
+    """Perturbing x at time t must not change y before t."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 16, 2, 4, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (b, s, h, n))
+    C = jax.random.normal(ks[4], (b, s, h, n))
+    t = 8
+    y1 = ssd_chunked(x, dt, a, B, C, 4)
+    x2 = x.at[:, t:].add(3.0)
+    y2 = ssd_chunked(x2, dt, a, B, C, 4)
+    assert float(jnp.max(jnp.abs(y2[:, :t] - y1[:, :t]))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 5))
+@settings(max_examples=8, deadline=None)
+def test_attention_causality(seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q, k, v = (jax.random.normal(kk, (1, 32, 8)) for kk in ks)
+    t = 16
+    y1 = swa_attention_ref(q, k, v)
+    y2 = swa_attention_ref(q, k.at[:, t:].add(2.0), v.at[:, t:].add(2.0))
+    assert float(jnp.max(jnp.abs(y2[:, :t] - y1[:, :t]))) < 1e-5
+
+
+@given(st.integers(1, 4))
+@settings(max_examples=6, deadline=None)
+def test_attention_window_monotone_coverage(w_blocks):
+    """Growing the window toward S must converge to global attention."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q, k, v = (jax.random.normal(kk, (1, 32, 8)) for kk in ks)
+    full = swa_attention_ref(q, k, v, window=0)
+    win = swa_attention_ref(q, k, v, window=8 * w_blocks)
+    err = float(jnp.max(jnp.abs(full - win)))
+    if w_blocks >= 4:       # window == S
+        assert err < 1e-6
+    # rows within the window are exact regardless
+    assert float(jnp.max(jnp.abs(full[:, :8 * w_blocks]
+                                 - win[:, :8 * w_blocks]))) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# aggregation invariants
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(1.0, 100.0), min_size=2, max_size=6),
+       st.floats(0.0, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_aggregate_convex_combination(sizes, vv):
+    """With ε=0 the aggregate lies in the convex hull of the inputs."""
+    d = jnp.array(sizes)
+    n = d.shape[0]
+    vals = jnp.linspace(-2.0, 3.0, n)
+    client = {"w": vals[:, None] * jnp.ones((n, 4))}
+    server = {"w": jnp.full((4,), 0.5)}
+    v = jnp.full((n,), vv)
+    out = dt_aggregate(client, server, d, v, epsilon=0.0)
+    lo = min(float(vals.min()), 0.5) - 1e-5
+    hi = max(float(vals.max()), 0.5) + 1e-5
+    assert bool(jnp.all((out["w"] >= lo) & (out["w"] <= hi)))
+
+
+@given(st.integers(2, 6))
+@settings(max_examples=10, deadline=None)
+def test_fedavg_mean_of_equal_weights(n):
+    client = {"w": jnp.arange(float(n))[:, None] * jnp.ones((n, 3))}
+    out = fedavg(client, jnp.ones((n,)))
+    assert jnp.allclose(out["w"], (n - 1) / 2.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+@given(st.floats(1e-4, 1e-2), st.integers(0, 4))
+@settings(max_examples=10, deadline=None)
+def test_adamw_step_bounded(lr, seed):
+    """|Δp| ≤ lr·(1 + wd·|p|)/(1−eps-ish): Adam's per-step trust region."""
+    key = jax.random.PRNGKey(seed)
+    params = {"w": jax.random.normal(key, (16,))}
+    cfg = AdamWConfig(lr=lr, weight_decay=0.1, grad_clip=0.0)
+    opt = init_opt_state(params, cfg)
+    g = {"w": jax.random.normal(jax.random.fold_in(key, 1), (16,)) * 100}
+    p2, _ = adamw_update(g, opt, params, cfg)
+    step = jnp.abs(p2["w"] - params["w"])
+    bound = lr * (1.0 / (1 - 0.9) + 0.1 * jnp.abs(params["w"])) * 1.01
+    assert bool(jnp.all(step <= bound))

@@ -1,0 +1,157 @@
+"""Reputation / selection / aggregation / RONI / DT tests (paper §III, Eq. 3)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core.reputation as rep
+from repro.core.aggregation import dt_aggregate, fedavg
+from repro.core.digital_twin import dt_feature_noise, split_mapping_mask
+from repro.core.roni import roni_filter
+
+
+def test_ac_increasing_concave():
+    d = jnp.linspace(0, 5000, 100)
+    ac = rep.accuracy_contribution(d)
+    diffs = jnp.diff(ac)
+    assert bool(jnp.all(diffs > 0))           # increasing
+    assert bool(jnp.all(jnp.diff(diffs) < 1e-9))  # concave
+
+
+def test_staleness_update_and_normalization():
+    state = rep.init_reputation(4)
+    sel = jnp.array([True, False, False, False])
+    state = rep.update_staleness(state, sel)
+    state = rep.update_staleness(state, jnp.zeros(4, bool))
+    # client 0 selected at round 1 → ms reset to 1 then +1 = 2; others 3
+    assert list(state.ms) == [2.0, 3.0, 3.0, 3.0]
+    ms_bar = rep.normalized_staleness(state.ms)
+    assert float(jnp.sum(ms_bar)) == pytest.approx(1.0)
+
+
+def test_pi_ratio():
+    state = rep.init_reputation(2)
+    state = rep.update_interactions(state, jnp.array([0, 1]),
+                                    jnp.array([True, False]))
+    pi = rep.positive_interaction(state)
+    assert float(pi[0]) == pytest.approx(1.0)       # 2 PI / 2
+    assert float(pi[1]) == pytest.approx(0.5)       # 1 PI, 1 NI
+
+
+def test_selection_prefers_high_reputation():
+    state = rep.init_reputation(6)
+    state.ni_count = state.ni_count.at[0].set(50.0)   # notorious poisoner
+    d = jnp.full((6,), 1000.0)
+    sel, z = rep.select_clients(state, d, 3)
+    assert 0 not in sel.tolist()
+
+
+def test_selection_staleness_rotation():
+    """Unselected clients gain staleness and eventually get picked."""
+    state = rep.init_reputation(6)
+    d = jnp.full((6,), 1000.0)
+    seen = set()
+    for _ in range(6):
+        sel, _ = rep.select_clients(state, d, 2)
+        seen.update(sel.tolist())
+        mask = jnp.zeros((6,), bool).at[sel].set(True)
+        state = rep.update_staleness(state, mask)
+    assert seen == set(range(6))   # MS term guarantees coverage
+
+
+@given(st.integers(2, 8), st.integers(0, 3))
+@settings(max_examples=20, deadline=None)
+def test_weights_bound_reputation(n, seed):
+    key = jax.random.PRNGKey(seed)
+    state = rep.init_reputation(n)
+    d = jax.random.uniform(key, (n,)) * 5000
+    z = rep.reputation(state, d)
+    assert bool(jnp.all(z >= 0)) and bool(jnp.all(z <= 1.0 + 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# aggregation Eq. (3)
+# ---------------------------------------------------------------------------
+def _toy_params(vals):
+    return {"w": jnp.stack([jnp.full((3,), v) for v in vals])}
+
+
+def test_aggregate_identity_when_all_equal():
+    """Γ-property (Eq. 4): if w_n = w_S = w and ε = 0, aggregate returns w."""
+    client = _toy_params([2.0, 2.0])
+    server = {"w": jnp.full((3,), 2.0)}
+    d = jnp.array([10.0, 30.0])
+    v = jnp.array([0.25, 0.5])
+    out = dt_aggregate(client, server, d, v, epsilon=0.0)
+    assert jnp.allclose(out["w"], 2.0)
+
+
+def test_aggregate_gamma_scaling_with_epsilon():
+    """With ε > 0 the same-weights aggregate scales by Γ = 1 + εN/D (Eq. 4)."""
+    client = _toy_params([1.0, 1.0])
+    server = {"w": jnp.ones((3,))}
+    d = jnp.array([10.0, 30.0])
+    v = jnp.array([0.2, 0.2])
+    eps = 2.0
+    out = dt_aggregate(client, server, d, v, epsilon=eps)
+    gamma = 1 + eps * 2 / 40.0
+    assert jnp.allclose(out["w"], gamma)
+
+
+def test_aggregate_weights_by_data_size():
+    client = _toy_params([0.0, 1.0])
+    server = {"w": jnp.zeros((3,))}
+    d = jnp.array([10.0, 90.0])
+    v = jnp.zeros((2,))
+    out = dt_aggregate(client, server, d, v, epsilon=0.0)
+    assert jnp.allclose(out["w"], 0.9)
+
+
+def test_fedavg_excludes_masked():
+    client = _toy_params([1.0, 5.0])
+    out = fedavg(client, jnp.array([10., 10.]),
+                 include_mask=jnp.array([True, False]))
+    assert jnp.allclose(out["w"], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# RONI
+# ---------------------------------------------------------------------------
+def test_roni_flags_poisoned_update():
+    """A client pushing the aggregate across the decision boundary is
+    detected by the leave-one-out validation sweep."""
+    def logits_fn(p, x):
+        s = (x @ p["w"])
+        return jnp.stack([-s, s], axis=1)
+
+    x_val = jnp.array([[1.0], [-1.0], [2.0], [-2.0]])
+    y_val = jnp.array([1, 0, 1, 0])
+    one = jnp.ones((1,))
+    client = {"w": jnp.stack([one, one, -9.0 * one])}
+    server = {"w": one}
+    d = jnp.full((3,), 10.0)
+    v = jnp.zeros((3,))
+    pos, _, _ = roni_filter(client, server, d, v, 0.0, logits_fn,
+                            x_val, y_val, 0.02)
+    assert pos.tolist() == [True, True, False]
+
+
+# ---------------------------------------------------------------------------
+# digital twin
+# ---------------------------------------------------------------------------
+def test_mapping_mask_respects_ratio():
+    key = jax.random.PRNGKey(0)
+    mask = jnp.ones((2, 2000), bool)
+    v = jnp.array([0.0, 0.5])
+    mm = split_mapping_mask(key, mask, v)
+    assert int(mm[0].sum()) == 0
+    frac = float(mm[1].mean())
+    assert 0.42 < frac < 0.58
+
+
+def test_dt_noise_bounded():
+    key = jax.random.PRNGKey(1)
+    x = jnp.ones((100, 10))
+    for eps in (0.0, 0.3):
+        xn = dt_feature_noise(key, x, eps)
+        assert bool(jnp.all(jnp.abs(xn - x) <= eps + 1e-6))

@@ -1,0 +1,67 @@
+"""Input-spec / shape-policy tests (deliverable f plumbing)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ALIASES, get_config
+from repro.launch.specs import (LONG_DECODE_WINDOW, SHAPES, adapt_config,
+                                input_specs, shape_applicable, token_specs)
+
+
+def test_all_shapes_defined():
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["long_500k"].seq_len == 524_288
+
+
+@pytest.mark.parametrize("arch", list(ALIASES))
+def test_specs_cover_all_archs(arch):
+    cfg = get_config(arch)
+    for name, shape in SHAPES.items():
+        ok, reason = shape_applicable(cfg, shape)
+        if not ok:
+            assert arch == "seamless-m4t-large-v2" and name == "long_500k"
+            assert reason
+            continue
+        acfg = adapt_config(cfg, shape)
+        spec = input_specs(acfg, shape)
+        if shape.mode in ("train", "prefill"):
+            toks = spec["batch"]["tokens"]
+            assert toks.dtype == jnp.int32
+            assert toks.shape[0] == shape.global_batch
+            if cfg.num_patch_tokens:
+                assert spec["batch"]["patches"].shape == \
+                    (shape.global_batch, cfg.num_patch_tokens, cfg.d_model)
+                assert toks.shape[1] == shape.seq_len - cfg.num_patch_tokens
+            elif cfg.encoder_layers:
+                assert spec["batch"]["frames"].shape[1] == \
+                    shape.seq_len // cfg.encoder_ratio
+            else:
+                assert toks.shape[1] == shape.seq_len
+        else:
+            assert spec["token"].shape == (shape.global_batch, 1)
+            assert "caches" in spec
+
+
+def test_long_decode_forces_window_for_full_attention():
+    for arch, expect_window in (("granite-3-8b", True), ("nemotron-4-340b", True),
+                                ("mamba2-2.7b", False), ("gemma2-9b", False),
+                                ("zamba2-2.7b", False)):
+        cfg = adapt_config(get_config(arch), SHAPES["long_500k"])
+        if expect_window:
+            assert cfg.decode_window == LONG_DECODE_WINDOW, arch
+        else:
+            assert cfg.decode_window == 0, arch
+
+
+def test_windowed_decode_cache_is_ring_sized():
+    import jax
+    from repro.models import init_caches
+    cfg = adapt_config(get_config("granite-3-8b"), SHAPES["long_500k"])
+    caches = jax.eval_shape(lambda: init_caches(cfg, 1, 524_288))
+    k = caches["entries"][0]["k"]
+    assert k.shape[-3] == LONG_DECODE_WINDOW      # ring buffer, not 500k
+    # whereas the unwindowed variant would be full-length
+    cfg2 = get_config("granite-3-8b")
+    caches2 = jax.eval_shape(lambda: init_caches(cfg2, 1, 524_288))
+    assert caches2["entries"][0]["k"].shape[-3] == 524_288

@@ -1,0 +1,161 @@
+"""Substrate tests: optimizer, checkpoint, data pipeline, sharding rules,
+HLO walker."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.checkpoint.io import (latest_step, restore_checkpoint,
+                                 save_checkpoint)
+from repro.data.pipeline import PipelineConfig, lm_batches
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_MNIST, lm_token_batch
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    opt = init_opt_state(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, opt = adamw_update(g, opt, params, cfg)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_grad_clip():
+    params = {"w": jnp.zeros(4)}
+    cfg = AdamWConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0)
+    opt = init_opt_state(params, cfg)
+    huge = {"w": jnp.full((4,), 1e6)}
+    p2, _ = adamw_update(huge, opt, params, cfg)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 10.0
+
+
+def test_adamw_bf16_moments():
+    params = {"w": jnp.zeros(4, jnp.bfloat16)}
+    cfg = AdamWConfig(moment_dtype="bfloat16")
+    opt = init_opt_state(params, cfg)
+    assert opt["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones(4, jnp.bfloat16)}
+    p2, o2 = adamw_update(g, opt, params, cfg)
+    assert o2["mu"]["w"].dtype == jnp.bfloat16
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)},
+            "count": jnp.zeros((), jnp.int32)}
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, tree, step=3)
+    save_checkpoint(path, tree, step=7)
+    assert latest_step(path) == 7
+    out = restore_checkpoint(path, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_retention(tmp_path):
+    path = str(tmp_path / "ckpt")
+    for s in range(6):
+        save_checkpoint(path, {"x": jnp.zeros(1)}, step=s, keep=2)
+    import os
+    steps = [d for d in os.listdir(path) if d.startswith("step_")]
+    assert len(steps) == 2
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+def test_lm_batches_deterministic():
+    pipe = PipelineConfig(global_batch=4, seq_len=16, vocab_size=100, seed=1)
+    a = next(lm_batches(pipe))
+    b = next(lm_batches(pipe))
+    assert jnp.array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].shape == (4, 16)
+    assert int(a["tokens"].max()) < 100
+
+
+def test_lm_stream_has_structure():
+    toks = lm_token_batch(jax.random.PRNGKey(0), 8, 256, 1000)
+    # copy-back structure → token t equals token t-2 far above chance
+    eq = float(jnp.mean((toks[:, 2:] == toks[:, :-2]).astype(jnp.float32)))
+    assert eq > 0.3
+
+
+def test_federated_partitions():
+    data = make_federated_data(jax.random.PRNGKey(0), SYNTHETIC_MNIST, m=10,
+                               cap=64, poison_ratio=0.3, iid=False,
+                               labels_per_client=1)
+    assert int(data.poisoned.sum()) == 3
+    # non-IID: each client's valid labels take ≤ labels_per_client values
+    for i in range(10):
+        labs = np.unique(np.asarray(data.y[i])[np.asarray(data.mask[i])])
+        assert len(labs) <= 1
+    # poisoned client's training labels flipped
+    pi = int(jnp.argmax(data.poisoned.astype(jnp.int32)))
+    assert bool(jnp.all(data.y_train[pi] == 9 - data.y[pi]))
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+def test_param_specs_divisible():
+    """Every spec the rules emit must evenly divide the leaf dims."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.sharding.rules import param_spec
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+
+    cfg = get_config("granite-3-8b")
+    sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    mesh = FakeMesh()
+
+    def check(path, leaf):
+        spec = param_spec(path, leaf, mesh)
+        for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * 9):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (path, leaf.shape, spec)
+    jax.tree_util.tree_map_with_path(check, sds)
+
+
+# ---------------------------------------------------------------------------
+# HLO walker
+# ---------------------------------------------------------------------------
+def test_hlo_walker_trip_count():
+    """The walker multiplies while bodies by known_trip_count (raw XLA cost
+    analysis counts them once)."""
+    from repro.analysis.hlo_walk import HloCost
+
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return y
+
+    x = jnp.ones((64, 64))
+    w = jnp.ones((64, 64))
+    compiled = jax.jit(f).lower(x, w).compile()
+    walk = HloCost(compiled.as_text()).entry_cost()
+    one_matmul = 2 * 64 * 64 * 64
+    assert walk["flops"] >= 8 * one_matmul * 0.99, walk["flops"]
+    raw = compiled.cost_analysis()["flops"]
+    assert raw < 2 * one_matmul   # raw undercounts — the reason walker exists
