@@ -68,6 +68,33 @@ def fl_experiment(seed: int, dataset: str = "mnist", scheme: str = "proposed",
     return hist
 
 
+def mc_channel_draws(key, k: int, n: int):
+    """[K, N] channel power gains, each row sorted descending (SIC order) —
+    the Monte-Carlo input of the batched Stackelberg engine."""
+    from repro.core.channel import sample_sic_channel_batch
+    return sample_sic_channel_batch(key, k, n)
+
+
+def mc_equilibrium_stats(game: GameConfig, key, k: int, n: int, d, vmax,
+                         scheme: str = "proposed", epsilon: float = 0.0):
+    """Mean/std total cost over K channel realizations, solved in ONE
+    batched XLA call via the jitted Stackelberg engine."""
+    from repro.core.fl_round import allocate_batched
+    h2_batch = mc_channel_draws(key, k, n)
+    alloc = allocate_batched(scheme, game, h2_batch,
+                             jnp.broadcast_to(d, (k, n)),
+                             jnp.broadcast_to(vmax, (k, n)),
+                             epsilon=epsilon)
+    cost = alloc.t_total + alloc.energy
+    return {
+        "mean_cost": float(jnp.mean(cost)),
+        "std_cost": float(jnp.std(cost)),
+        "mean_energy": float(jnp.mean(alloc.energy)),
+        "mean_latency": float(jnp.mean(alloc.t_total)),
+        "feasible_frac": float(jnp.mean(alloc.feasible.astype(jnp.float32))),
+    }
+
+
 def curve(hist, key="val_acc"):
     return [h[key] for h in hist]
 

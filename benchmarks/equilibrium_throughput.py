@@ -1,0 +1,109 @@
+"""Stackelberg equilibrium engine throughput — solves/sec for the three
+execution paths at K ∈ {1, 64, 1024} independent 5-client realizations:
+
+  * legacy — ``equilibrium_eager``: host-side Python loop, per-iteration
+    ``float()``/``bool()`` device syncs, one instance at a time;
+  * jit    — ``equilibrium``: the whole Alg.-2 alternation as one XLA
+    program, still dispatched per instance;
+  * vmap   — ``batched_equilibrium``: all K realizations in ONE XLA call.
+
+Writes ``BENCH_equilibrium.json`` (repo root) so later PRs can track the
+throughput trajectory; the legacy path is measured on a subsample at large
+K (it is the slow baseline — running it 1024× would dominate the bench).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from .common import mc_channel_draws
+
+N_CLIENTS = 5
+K_VALUES = (1, 64, 1024)
+LEGACY_CAP = 16          # legacy instances actually timed at large K
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_equilibrium.json")
+
+
+def _inputs(k: int):
+    key = jax.random.PRNGKey(1234)
+    h2 = mc_channel_draws(key, k, N_CLIENTS)
+    d = 100.0 + 200.0 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                           (k, N_CLIENTS))
+    vmax = 0.3 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                          (k, N_CLIENTS))
+    return h2, d, vmax
+
+
+def _rate(elapsed_s: float, solves: int) -> float:
+    return solves / max(elapsed_s, 1e-12)
+
+
+def run():
+    from repro.core.stackelberg import (GameConfig, batched_equilibrium,
+                                        equilibrium, equilibrium_eager)
+    cfg = GameConfig()
+    t_start = time.perf_counter()
+    results = []
+    for k in K_VALUES:
+        h2, d, vmax = _inputs(k)
+
+        # legacy eager loop (subsampled at large K — it is the baseline)
+        k_legacy = min(k, LEGACY_CAP)
+        equilibrium_eager(cfg, h2[0], d[0], vmax[0])        # warm caches
+        t0 = time.perf_counter()
+        for i in range(k_legacy):
+            equilibrium_eager(cfg, h2[i], d[i], vmax[i])
+        legacy_sps = _rate(time.perf_counter() - t0, k_legacy)
+
+        # jitted engine, dispatched per instance
+        k_jit = min(k, 64)
+        jax.block_until_ready(equilibrium(cfg, h2[0], d[0], vmax[0]).energy)
+        t0 = time.perf_counter()
+        for i in range(k_jit):
+            out = equilibrium(cfg, h2[i], d[i], vmax[i])
+        jax.block_until_ready(out.energy)
+        jit_sps = _rate(time.perf_counter() - t0, k_jit)
+
+        # vmapped engine: one XLA call for all K
+        out = batched_equilibrium(cfg, h2, d, vmax)
+        jax.block_until_ready(out.energy)                   # compile + warm
+        t0 = time.perf_counter()
+        out = batched_equilibrium(cfg, h2, d, vmax)
+        jax.block_until_ready(out.energy)
+        vmap_sps = _rate(time.perf_counter() - t0, k)
+        assert bool(jnp.all(jnp.isfinite(out.energy))), "non-finite energies"
+
+        results.append({
+            "K": k,
+            "n_clients": N_CLIENTS,
+            "legacy_solves_per_sec": round(legacy_sps, 2),
+            "legacy_measured_on": k_legacy,
+            "jit_solves_per_sec": round(jit_sps, 2),
+            "jit_measured_on": k_jit,
+            "vmap_solves_per_sec": round(vmap_sps, 2),
+            "speedup_jit_vs_legacy": round(jit_sps / legacy_sps, 2),
+            "speedup_vmap_vs_legacy": round(vmap_sps / legacy_sps, 2),
+        })
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"bench": "stackelberg_equilibrium_throughput",
+                   "results": results}, f, indent=2)
+
+    elapsed_us = (time.perf_counter() - t_start) * 1e6
+    big = results[-1]
+    return [("equilibrium_throughput", elapsed_us,
+             f"K={big['K']};legacy_sps={big['legacy_solves_per_sec']};"
+             f"jit_sps={big['jit_solves_per_sec']};"
+             f"vmap_sps={big['vmap_solves_per_sec']};"
+             f"vmap_speedup={big['speedup_vmap_vs_legacy']}x;"
+             f"target_20x_met={big['speedup_vmap_vs_legacy'] >= 20}")]
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -3,6 +3,9 @@ micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig4,fig9,kernels
+    PYTHONPATH=src python -m benchmarks.run --only equilibrium   # fast mode:
+        # just the batched Stackelberg engine throughput (~seconds), writes
+        # BENCH_equilibrium.json for trajectory tracking
 """
 from __future__ import annotations
 
@@ -13,7 +16,8 @@ import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels")
+SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
+          "equilibrium")
 
 
 def main() -> None:
@@ -40,6 +44,8 @@ def main() -> None:
                 from . import fig9_total_cost as mod
             elif suite == "ablation":
                 from . import ablation_weights as mod
+            elif suite == "equilibrium":
+                from . import equilibrium_throughput as mod
             else:
                 from . import kernels_microbench as mod
             for name, us, derived in mod.run():

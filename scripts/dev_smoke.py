@@ -64,3 +64,16 @@ patches = jax.random.normal(jax.random.PRNGKey(3), (B, P, 64))
 run("vlm", cfg, dict(tokens=toks[:, :S - P], targets=toks[:, :S - P], patches=patches))
 
 print("ALL FAMILIES OK")
+
+# batched Stackelberg equilibrium engine (core FL hot path): K realizations
+# in one vmapped XLA call — exercises the jit/vmap throughput path in smoke
+from repro.core.channel import sample_sic_channel_batch
+from repro.core.stackelberg import GameConfig, batched_equilibrium
+
+K, N = 8, 5
+h2b = sample_sic_channel_batch(jax.random.PRNGKey(7), K, N)
+alloc = batched_equilibrium(GameConfig(), h2b, jnp.full((N,), 200.0),
+                            jnp.full((N,), 0.5))
+assert alloc.energy.shape == (K,) and bool(jnp.all(jnp.isfinite(alloc.energy)))
+assert bool(jnp.all(jnp.isfinite(alloc.t_total)))
+print(f"batched equilibrium OK: K={K} mean_energy={float(alloc.energy.mean()):.4f}")

@@ -116,10 +116,10 @@ def parse_hlo(text: str) -> Dict[str, Computation]:
 def _dot_flops(instr: Instr, types: Dict[str, str]) -> int:
     """2 × prod(result dims) × prod(contracted lhs dims)."""
     res_dims = _shape_dims(instr.type_str) or []
-    m = re.search(r"\(([^)]*)\)", instr.rest)
-    if not m:
-        return 0
-    operands = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+    # operand lists print as "f32[64,64]{1,0} %name" — strip the type prefix
+    # via _operand_names, else the types lookup misses and the contracted
+    # dim silently degrades to 1 (8192 instead of 524288 flops per 64³ dot)
+    operands = _operand_names(instr)
     lhs = operands[0] if operands else None
     lhs_type = types.get(lhs, "")
     lhs_dims = _shape_dims(lhs_type) or []
@@ -137,10 +137,7 @@ def _dot_flops(instr: Instr, types: Dict[str, str]) -> int:
 
 def _conv_flops(instr: Instr, types: Dict[str, str]) -> int:
     res_dims = _shape_dims(instr.type_str) or []
-    m = re.search(r"\(([^)]*)\)", instr.rest)
-    if not m:
-        return 0
-    operands = [a.strip().lstrip("%") for a in m.group(1).split(",")]
+    operands = _operand_names(instr)
     if len(operands) < 2:
         return 0
     k_dims = _shape_dims(types.get(operands[1], "")) or []
@@ -157,8 +154,15 @@ def _operand_names(instr: Instr) -> List[str]:
     m = re.search(r"\(([^)]*)\)", instr.rest)
     if not m:
         return []
-    return [a.strip().lstrip("%").split(" ")[-1].lstrip("%")
-            for a in m.group(1).split(",") if a.strip()]
+    # operands print as "f32[64,64]{1,0} %name": the dims commas break a
+    # naive split(","), so pull the %-prefixed references directly
+    names = re.findall(r"%([\w.\-]+)", m.group(1))
+    if names:
+        return names
+    # printers that omit the '%' sigil: drop dims/layout groups first so the
+    # remaining commas are real operand separators, then take the name token
+    bare = re.sub(r"\[[^\]]*\]|\{[^}]*\}", "", m.group(1))
+    return [a.strip().split(" ")[-1] for a in bare.split(",") if a.strip()]
 
 
 def _trip_count(instr: Instr) -> int:

@@ -8,9 +8,11 @@ from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
                          init_reputation, select_clients)
 from .reputation import reputation as reputation_score
 from . import reputation  # keep the submodule accessible (not the function)
-from .stackelberg import (Allocation, GameConfig, equilibrium, follower_alpha,
-                          leader_f, leader_v, oma_allocation,
-                          random_allocation, wo_dt_allocation)
+from .stackelberg import (Allocation, GameConfig, batched_equilibrium,
+                          batched_wo_dt_allocation, equilibrium,
+                          equilibrium_eager, follower_alpha, leader_f,
+                          leader_v, oma_allocation, random_allocation,
+                          wo_dt_allocation)
 
 __all__ = [
     "BANDWIDTH_HZ", "noise_power", "sample_channel_gains", "sample_positions",
@@ -18,6 +20,7 @@ __all__ = [
     "FLConfig", "FLState", "run_round", "run_training", "BENCHMARK_WEIGHTS",
     "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
     "reputation_score", "select_clients", "Allocation", "GameConfig", "equilibrium",
+    "batched_equilibrium", "batched_wo_dt_allocation", "equilibrium_eager",
     "follower_alpha", "leader_f", "leader_v", "oma_allocation",
     "random_allocation", "wo_dt_allocation",
 ]

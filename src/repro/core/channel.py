@@ -41,3 +41,16 @@ def sample_channel_gains(key, distances, pathloss_exp: float = PATHLOSS_EXP,
 def sample_round_channels(key, distances):
     """Fresh fading realization each FL round (block-fading model)."""
     return sample_channel_gains(key, distances)
+
+
+def sample_sic_channel_batch(key, k: int, n: int,
+                             radius: float = CELL_RADIUS_M):
+    """[K, N] independent channel realizations, each row sorted descending
+    — the SIC decode order the Stackelberg engine expects.  Shared by the
+    Monte-Carlo benchmarks and smoke runs (tests build their own draws on
+    purpose, to feed the engine independently-constructed inputs)."""
+    def one(kk):
+        k1, k2 = jax.random.split(kk)
+        h2 = sample_channel_gains(k2, sample_positions(k1, n, radius))
+        return jnp.sort(h2)[::-1]
+    return jax.vmap(one)(jax.random.split(key, k))

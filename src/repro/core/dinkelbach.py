@@ -25,6 +25,11 @@ the default fast path.
 ``successive_power`` applies the paper's successive-optimization order
 (§V-B-3): clients are optimized N → 1 in SIC order, each seeing the already-
 fixed interference of later-decoded clients — a reverse ``lax.scan``.
+
+Everything except ``return_trace`` mode is trace-safe: ``dinkelbach_power``
+and ``successive_power`` carry fixed-dtype arrays only, so the Stackelberg
+engine can ``vmap`` them across K channel realizations (the batched
+``lax.while_loop`` keeps converged lanes frozen while the rest iterate).
 """
 from __future__ import annotations
 
@@ -112,7 +117,11 @@ def dinkelbach_power(d, g, f_eff, bandwidth, p_min, p_max,
             trace.append(float(q))
             it += 1
         return p, q, it, trace
-    p, q, w, it = jax.lax.while_loop(cond, body, (p0, q0, jnp.inf, 0))
+    # fixed-dtype carry: weak-typed jnp.inf / python-int counters would
+    # promote (and retrace) under x64 or when vmapped from the batched engine
+    w0 = jnp.asarray(jnp.inf, p0.dtype)
+    p, q, w, it = jax.lax.while_loop(cond, body,
+                                     (p0, q0, w0, jnp.asarray(0, jnp.int32)))
     return p, q, it
 
 

@@ -31,8 +31,9 @@ from . import reputation as rep
 from .aggregation import dt_aggregate, fedavg
 from .digital_twin import dt_feature_noise, split_mapping_mask
 from .roni import roni_filter
-from .stackelberg import (Allocation, GameConfig, equilibrium, oma_allocation,
-                          random_allocation, wo_dt_allocation)
+from .stackelberg import (Allocation, GameConfig, batched_equilibrium,
+                          batched_wo_dt_allocation, equilibrium,
+                          oma_allocation, random_allocation, wo_dt_allocation)
 from .channel import sample_round_channels
 
 
@@ -102,6 +103,9 @@ def _val_acc(logits_fn, x_val, y_val, params):
 # ---------------------------------------------------------------------------
 def allocate(scheme: str, game_cfg: GameConfig, key, h2_sorted, d_units,
              v_max_sel) -> Allocation:
+    """Per-round resource allocation.  "proposed"/"ideal"/"wo_dt" route
+    through the jitted Stackelberg engine — one compile per GameConfig,
+    no host syncs inside the solve."""
     if scheme in ("proposed", "ideal"):
         return equilibrium(game_cfg, h2_sorted, d_units, v_max_sel)
     if scheme == "wo_dt":
@@ -111,6 +115,22 @@ def allocate(scheme: str, game_cfg: GameConfig, key, h2_sorted, d_units,
     if scheme == "random":
         return random_allocation(game_cfg, key, h2_sorted, d_units, v_max_sel)
     raise ValueError(scheme)
+
+
+def allocate_batched(scheme: str, game_cfg: GameConfig, h2_batch, d_batch,
+                     v_max_batch, epsilon: float = 0.0) -> Allocation:
+    """Monte-Carlo allocation: solve K network realizations in one XLA
+    call (used by the Fig. 6–9 benchmark sweeps and throughput bench).
+    Only the engine-backed schemes batch; baselines stay per-instance.
+    ``epsilon`` (DT mapping deviation) reaches the engine for the DT
+    schemes; "wo_dt" has no twin and ignores it (matching
+    ``wo_dt_allocation``)."""
+    if scheme in ("proposed", "ideal"):
+        return batched_equilibrium(game_cfg, h2_batch, d_batch, v_max_batch,
+                                   epsilon=epsilon)
+    if scheme == "wo_dt":
+        return batched_wo_dt_allocation(game_cfg, h2_batch, d_batch)
+    raise ValueError(f"no batched path for scheme {scheme!r}")
 
 
 def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,

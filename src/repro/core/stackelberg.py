@@ -11,10 +11,30 @@ Closed-form structure used by ``equilibrium`` (Algorithm 2):
       v_n* = v_n_max                                               (§V-B-1)
       f_n* = max(f̃_n, f_min),  f̃_n = (1−v_n)·c_n·D_n / A_n        (§V-B-2)
       p_n* via successive Dinkelbach                               (§V-B-3)
+
+Engine layout (one XLA program per solve):
+
+  * ``equilibrium``         — single instance, fully jitted: the Alg.-2
+    alternation runs as a ``lax.while_loop`` whose carry holds the
+    best-iterate safeguard (lexicographic (infeasible, energy) key) and
+    the convergence flag as JAX arrays — no host syncs on the hot path.
+  * ``batched_equilibrium`` — ``vmap`` of the same body over K independent
+    network realizations ``h2_batch[K, N]``; one XLA call solves all K
+    (the Monte-Carlo workload of Figs. 4–9 and related incentive-game
+    reproductions).
+  * ``equilibrium_eager``   — the legacy host-side Python loop with
+    per-iteration ``float()``/``bool()`` syncs, kept as the numerical
+    reference for tests and the throughput microbench.
+
+``Allocation`` is registered as a pytree so whole solves can cross
+``jit``/``vmap`` boundaries; under ``batched_equilibrium`` every field
+gains a leading K axis.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Tuple
 
 import jax
@@ -29,7 +49,11 @@ TAU = 2e-28  # effective capacitance coefficient (Table I / [22])
 
 @dataclass(frozen=True)
 class GameConfig:
-    """Table I simulation parameters."""
+    """Table I simulation parameters.
+
+    Frozen + hashable: passed as a static argument to the jitted solvers,
+    so each distinct parameterization compiles exactly once.
+    """
     bandwidth: float = BANDWIDTH_HZ
     sigma2: float = field(default_factory=noise_power)
     p_min: float = 0.01
@@ -105,7 +129,15 @@ class Allocation:
     energy: jax.Array      # scalar total energy E (Eq. 18)
     e_cmp: jax.Array
     e_com: jax.Array
-    iterations: int = 0
+    iterations: jax.Array | int = 0
+    feasible: jax.Array | bool = True   # best iterate met the deadline
+
+
+_ALLOC_FIELDS = tuple(f.name for f in dataclasses.fields(Allocation))
+# pytree registration: every field is a data leaf, so Allocation flows
+# through jit/vmap/scan; batched solves stack each field on a leading axis.
+jax.tree_util.register_dataclass(Allocation, data_fields=_ALLOC_FIELDS,
+                                 meta_fields=())
 
 
 def round_metrics(cfg: GameConfig, D, v, f, p, h2_sorted):
@@ -117,65 +149,170 @@ def round_metrics(cfg: GameConfig, D, v, f, p, h2_sorted):
     return rates, t_cmp, t_com, e_cmp, e_com
 
 
-def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
-                max_iter: int = 20, tol: float = 1e-6) -> Allocation:
-    """Algorithm 2 — alternate leader/follower best responses to the
-    Stackelberg equilibrium.  Inputs sorted by descending channel gain.
+def _leader_iteration(cfg: GameConfig, h2_sorted, D, v, f):
+    """One Alg.-2 leader sweep: p via successive Dinkelbach given the current
+    compute times, then f runs to the deadline given the new airtimes.
 
-    h2_sorted : [N] channel power gains (SIC order)
-    D         : [N] client data sizes (samples)
-    v_max     : [N] max insensitive-data fractions
+    Shared verbatim by the eager reference loop and the traced engine so the
+    two paths are numerically identical per iteration.
     """
-    n = h2_sorted.shape[0]
-    v = leader_v(jnp.broadcast_to(v_max, (n,)))
-    f = jnp.full((n,), cfg.f_max)
-    p = jnp.full((n,), cfg.p_max)
-    d_hat = v * D + epsilon                       # DT-mapped data size
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
+    p, q = successive_power(h2_sorted, cfg.model_bits, g_n, cfg.bandwidth,
+                            cfg.sigma2, cfg.p_min, cfg.p_max,
+                            inner=cfg.dinkelbach_inner)
+    rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+    t_com = noma.tx_latency(cfg.model_bits, rates)
+    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
+    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
+    _, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p, h2_sorted)
+    e_total = jnp.sum(e_cmp + e_com)
+    feasible = jnp.max(t_cmp + t_com) <= cfg.t_max + 1e-6
+    return f, p, q, e_total, feasible
 
-    prev_e = jnp.inf
-    it = 0
-    q = jnp.zeros((n,))
-    best = None   # best-iterate safeguard: Alg-2 alternation is not
-    #               guaranteed monotone near infeasible channel draws, so we
-    #               return the lowest-energy (deadline-feasible-first) iterate
-    for it in range(1, max_iter + 1):
-        # leader: power via successive Dinkelbach given current compute times
-        t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
-        g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
-        p, q = successive_power(h2_sorted, cfg.model_bits, g_n, cfg.bandwidth,
-                                cfg.sigma2, cfg.p_min, cfg.p_max,
-                                inner=cfg.dinkelbach_inner)
-        rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
-        t_com = noma.tx_latency(cfg.model_bits, rates)
-        # leader: frequency runs exactly to the deadline
-        a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
-        f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
-        rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
-                                                          h2_sorted)
-        e_total = jnp.sum(e_cmp + e_com)
-        feasible = bool(jnp.max(t_cmp + t_com) <= cfg.t_max + 1e-6)
-        cand = (not feasible, float(e_total), (v, f, p, q))
-        if best is None or cand[:2] < best[:2]:
-            best = cand
-        if jnp.abs(prev_e - e_total) < tol * jnp.maximum(e_total, 1e-12):
-            break
-        prev_e = e_total
-    v, f, p, q = best[2]
+
+def _finish(cfg: GameConfig, h2_sorted, D, v, f, p, q, d_hat, iterations,
+            feasible) -> Allocation:
+    """Follower best response to the leader's final strategy (Eq. 17)."""
     rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
                                                       h2_sorted)
-
-    # follower best response to the leader's final strategy
-    t_total_n = t_cmp + t_com
-    t_total = jnp.max(t_total_n)
-    alpha, t_s = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
-                                cfg.f_server)
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _t_s = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
+                                 cfg.f_server)
     t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha,
                               cfg.f_server)
     latency = jnp.maximum(t_total, jnp.max(t_dt))          # Eq. (17)
     return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
                       t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
                       t_total=latency, energy=jnp.sum(e_cmp + e_com),
-                      e_cmp=e_cmp, e_com=e_com, iterations=it)
+                      e_cmp=e_cmp, e_com=e_com, iterations=iterations,
+                      feasible=feasible)
+
+
+def _solve(cfg: GameConfig, h2_sorted, D, v_max, epsilon, max_iter: int,
+           tol) -> Allocation:
+    """Traced Alg.-2 alternation: a ``lax.while_loop`` whose carry holds the
+    best-iterate safeguard and the convergence flag as arrays.
+
+    The safeguard key is lexicographic (infeasible, energy): Alg-2
+    alternation is not guaranteed monotone near infeasible channel draws,
+    so we return the lowest-energy deadline-feasible-first iterate —
+    same policy as the legacy loop, minus the host syncs.
+    """
+    n = h2_sorted.shape[0]
+    dtype = jnp.result_type(h2_sorted)
+    v = leader_v(jnp.broadcast_to(v_max, (n,)).astype(dtype))
+    D = jnp.broadcast_to(D, (n,)).astype(dtype)
+    d_hat = v * D + epsilon                       # DT-mapped data size
+    f0 = jnp.full((n,), cfg.f_max, dtype)
+    p0 = jnp.full((n,), cfg.p_max, dtype)
+    q0 = jnp.zeros((n,), dtype)
+    inf = jnp.asarray(jnp.inf, dtype)
+
+    def cond(carry):
+        *_rest, it, done = carry
+        return (~done) & (it < max_iter)
+
+    def body(carry):
+        f, p, q, prev_e, bb, be, bf, bp, bq, it, _done = carry
+        f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f)
+        bad = jnp.where(feas, jnp.asarray(0.0, dtype),
+                        jnp.asarray(1.0, dtype))
+        # strict lexicographic improvement, matching the legacy tuple compare
+        better = (bad < bb) | ((bad == bb) & (e < be))
+        bb = jnp.where(better, bad, bb)
+        be = jnp.where(better, e, be)
+        bf = jnp.where(better, f, bf)
+        bp = jnp.where(better, p, bp)
+        bq = jnp.where(better, q, bq)
+        done = jnp.abs(prev_e - e) < tol * jnp.maximum(e, 1e-12)
+        return (f, p, q, e, bb, be, bf, bp, bq, it + 1, done)
+
+    init = (f0, p0, q0, inf,
+            jnp.asarray(2.0, dtype), inf, f0, p0, q0,   # best: bad, e, f, p, q
+            jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    carry = jax.lax.while_loop(cond, body, init)
+    _f, _p, _q, _e, bb, _be, bf, bp, bq, it, _done = carry
+    return _finish(cfg, h2_sorted, D, v, bf, bp, bq, d_hat, it, bb == 0.0)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_iter"))
+def _equilibrium_jit(cfg, h2_sorted, D, v_max, epsilon, tol, max_iter):
+    return _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter, tol)
+
+
+@partial(jax.jit, static_argnames=("cfg", "max_iter"))
+def _batched_equilibrium_jit(cfg, h2_batch, D_batch, v_max_batch, epsilon,
+                             tol, max_iter):
+    solve1 = lambda h2, d, vm: _solve(cfg, h2, d, vm, epsilon, max_iter, tol)
+    return jax.vmap(solve1)(h2_batch, D_batch, v_max_batch)
+
+
+def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
+                max_iter: int = 20, tol: float = 1e-6) -> Allocation:
+    """Algorithm 2 — alternate leader/follower best responses to the
+    Stackelberg equilibrium, compiled to a single XLA program.
+    Inputs sorted by descending channel gain.
+
+    h2_sorted : [N] channel power gains (SIC order)
+    D         : [N] client data sizes (samples)
+    v_max     : [N] max insensitive-data fractions
+    """
+    return _equilibrium_jit(cfg, h2_sorted, D, v_max, epsilon, tol,
+                            max_iter=max_iter)
+
+
+def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
+                        epsilon: float = 0.0, max_iter: int = 20,
+                        tol: float = 1e-6) -> Allocation:
+    """Solve K independent network realizations in ONE XLA call.
+
+    h2_batch    : [K, N] channel power gains, each row in SIC order
+    D_batch     : [K, N] or [N] client data sizes (broadcast across K)
+    v_max_batch : [K, N] or [N] max insensitive-data fractions
+
+    Returns an ``Allocation`` whose every field carries a leading K axis
+    (scalars such as ``energy`` become [K]).  This is the Monte-Carlo
+    entry point: thousands of channel draws per benchmark point amortize
+    to one compile + one device dispatch.
+    """
+    h2_batch = jnp.asarray(h2_batch)
+    k, n = h2_batch.shape
+    D_batch = jnp.broadcast_to(D_batch, (k, n))
+    v_max_batch = jnp.broadcast_to(v_max_batch, (k, n))
+    return _batched_equilibrium_jit(cfg, h2_batch, D_batch, v_max_batch,
+                                    epsilon, tol, max_iter=max_iter)
+
+
+def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
+                      epsilon: float = 0.0, max_iter: int = 20,
+                      tol: float = 1e-6) -> Allocation:
+    """Legacy Algorithm 2: host-side Python loop with per-iteration
+    ``float()``/``bool()`` device syncs.  Kept as the numerical reference
+    for the jitted engine (tests) and as the baseline of
+    ``benchmarks/equilibrium_throughput.py``.  Not jit/vmap-able.
+    """
+    n = h2_sorted.shape[0]
+    v = leader_v(jnp.broadcast_to(v_max, (n,)))
+    f = jnp.full((n,), cfg.f_max)
+    p = jnp.full((n,), cfg.p_max)
+    q = jnp.zeros((n,))
+    d_hat = v * D + epsilon                       # DT-mapped data size
+
+    prev_e = jnp.inf
+    it = 0
+    best = None   # best-iterate safeguard (see _solve)
+    for it in range(1, max_iter + 1):
+        f, p, q, e_total, feas = _leader_iteration(cfg, h2_sorted, D, v, f)
+        cand = (not bool(feas), float(e_total), (f, p, q))
+        if best is None or cand[:2] < best[:2]:
+            best = cand
+        if jnp.abs(prev_e - e_total) < tol * jnp.maximum(e_total, 1e-12):
+            break
+        prev_e = e_total
+    f, p, q = best[2]
+    return _finish(cfg, h2_sorted, D, v, f, p, q, d_hat, it,
+                   jnp.asarray(not best[0]))
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +334,8 @@ def random_allocation(cfg: GameConfig, key, h2_sorted, D, v_max,
     return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates,
                       q=jnp.zeros((n,)), t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
                       t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
+                      feasible=t_total <= cfg.t_max + 1e-6)
 
 
 def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
@@ -235,7 +373,8 @@ def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
     return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
                       t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
                       t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
+                      feasible=t_total <= cfg.t_max + 1e-6)
 
 
 def oma_tdma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
@@ -271,11 +410,22 @@ def oma_tdma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
     return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
                       t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
                       t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com)
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
+                      feasible=t_total <= cfg.t_max + 1e-6)
 
 
 def wo_dt_allocation(cfg: GameConfig, h2_sorted, D) -> Allocation:
-    """W/O-DT baseline: v ≡ 0, all training on-client (straggler-exposed)."""
+    """W/O-DT baseline: v ≡ 0, all training on-client (straggler-exposed).
+
+    Routed through the jitted engine (zero v_max shares the same XLA
+    program as the proposed scheme — no extra compile)."""
     n = h2_sorted.shape[0]
     zero_vmax = jnp.zeros((n,))
     return equilibrium(cfg, h2_sorted, D, zero_vmax, epsilon=0.0)
+
+
+def batched_wo_dt_allocation(cfg: GameConfig, h2_batch, D_batch) -> Allocation:
+    """Batched W/O-DT: K realizations with v ≡ 0 in one XLA call."""
+    h2_batch = jnp.asarray(h2_batch)
+    return batched_equilibrium(cfg, h2_batch, D_batch,
+                               jnp.zeros_like(h2_batch), epsilon=0.0)

@@ -1,0 +1,112 @@
+"""Offline fallback for the ``hypothesis`` property-testing surface.
+
+The tier-1 suite must collect and run in containers without ``hypothesis``
+installed.  This module mirrors the tiny subset of the API the tests use —
+``given``, ``settings`` and ``strategies`` (``floats`` / ``integers`` /
+``lists``) — backed by seeded ``jax.random`` example generation, so the
+property tests still execute as deterministic seeded example tests.
+
+Usage in test modules (real hypothesis wins when available):
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _prop import given, settings, strategies as st
+
+No shrinking, no database, no assume(): just ``max_examples`` draws per
+test, seeded from the test name so failures reproduce across runs.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import jax
+import jax.numpy as jnp
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, key):
+        """Draw one example from a jax PRNG key."""
+        return self._draw(key)
+
+
+def _floats(min_value, max_value):
+    lo, hi = float(min_value), float(max_value)
+
+    def draw(key):
+        u = float(jax.random.uniform(key, ()))
+        return lo + u * (hi - lo)
+    return _Strategy(draw)
+
+
+def _integers(min_value, max_value):
+    lo, hi = int(min_value), int(max_value)
+
+    def draw(key):
+        return int(jax.random.randint(key, (), lo, hi + 1))
+    return _Strategy(draw)
+
+
+def _lists(elements: _Strategy, min_size: int = 0, max_size: int = 10):
+    def draw(key):
+        k_size, k_elems = jax.random.split(key)
+        size = int(jax.random.randint(k_size, (), min_size, max_size + 1))
+        keys = jax.random.split(k_elems, max(size, 1))
+        return [elements.example(keys[i]) for i in range(size)]
+    return _Strategy(draw)
+
+
+class strategies:
+    """Namespace matching ``hypothesis.strategies`` for the subset used."""
+    floats = staticmethod(_floats)
+    integers = staticmethod(_integers)
+    lists = staticmethod(_lists)
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_ignored):
+    """Records ``max_examples`` on the test; other kwargs are accepted and
+    ignored (deadline etc. have no meaning for seeded example replay)."""
+    def deco(fn):
+        fn._prop_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    """Runs the test once per seeded example; example i of test ``t`` uses
+    PRNGKey(crc32(t) ^ i) so the sequence is stable across processes."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_prop_max_examples",
+                        getattr(fn, "_prop_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            base = zlib.crc32(fn.__name__.encode())
+            for i in range(n):
+                key = jax.random.PRNGKey((base ^ i) & 0x7FFFFFFF)
+                keys = jax.random.split(key, max(len(strats), 1))
+                example = [s.example(keys[j]) for j, s in enumerate(strats)]
+                try:
+                    fn(*args, *example, **kwargs)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (seeded fallback, draw {i}): "
+                        f"{example!r}") from e
+        # hide the example parameters from pytest's fixture resolution:
+        # the wrapper supplies them itself, so it must present a bare
+        # signature (and not advertise the original via __wrapped__)
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco

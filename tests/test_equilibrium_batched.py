@@ -1,0 +1,132 @@
+"""Batched Stackelberg engine tests: the jitted/vmapped solver must be a
+drop-in replacement for the legacy eager loop (ISSUE 1 acceptance).
+
+ (a) jitted single-instance solve == legacy eager loop on 20 random draws
+     (energy/latency within 1e-5 relative);
+ (b) vmap over K=32 draws == the K sequential jitted solves;
+ (c) deadline feasibility whenever a feasible iterate exists.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import sample_channel_gains, sample_positions
+from repro.core.stackelberg import (Allocation, GameConfig,
+                                    batched_equilibrium,
+                                    batched_wo_dt_allocation, equilibrium,
+                                    equilibrium_eager, wo_dt_allocation)
+
+CFG = GameConfig()
+N = 5
+REL = 1e-5
+
+
+def _draw(seed: int, n: int = N):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h2 = jnp.sort(sample_channel_gains(k2, sample_positions(k1, n)))[::-1]
+    d = 100.0 + 200.0 * jax.random.uniform(k3, (n,))
+    vmax = 0.3 + 0.5 * jax.random.uniform(k4, (n,))
+    return h2, d, vmax
+
+
+def _batch(k: int, seed0: int = 100):
+    hs, ds, vs = zip(*[_draw(seed0 + s) for s in range(k)])
+    return jnp.stack(hs), jnp.stack(ds), jnp.stack(vs)
+
+
+def _rel(a, b):
+    return abs(float(a) - float(b)) / max(abs(float(b)), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# (a) jitted engine ≡ legacy eager loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(20))
+def test_jit_matches_eager(seed):
+    h2, d, vmax = _draw(seed)
+    a = equilibrium(CFG, h2, d, vmax)
+    b = equilibrium_eager(CFG, h2, d, vmax)
+    assert _rel(a.energy, b.energy) < REL, (a.energy, b.energy)
+    assert _rel(a.t_total, b.t_total) < REL, (a.t_total, b.t_total)
+    assert int(a.iterations) == int(b.iterations)
+    assert bool(a.feasible) == bool(b.feasible)
+    assert jnp.allclose(a.p, b.p, rtol=1e-5)
+    assert jnp.allclose(a.f, b.f, rtol=1e-5)
+    assert jnp.allclose(a.alpha, b.alpha, rtol=1e-5)
+
+
+def test_jit_matches_eager_wo_dt():
+    """The v≡0 (W/O-DT) route shares the engine and must match too."""
+    h2, d, _ = _draw(3)
+    a = wo_dt_allocation(CFG, h2, d)
+    b = equilibrium_eager(CFG, h2, d, jnp.zeros((N,)))
+    assert _rel(a.energy, b.energy) < REL
+    assert _rel(a.t_total, b.t_total) < REL
+    assert bool(jnp.all(a.v == 0.0))
+
+
+# ---------------------------------------------------------------------------
+# (b) vmap over K draws ≡ K sequential solves
+# ---------------------------------------------------------------------------
+def test_vmap_equals_sequential():
+    k = 32
+    h2b, db, vmb = _batch(k)
+    ab = batched_equilibrium(CFG, h2b, db, vmb)
+    assert ab.energy.shape == (k,)
+    assert ab.f.shape == (k, N)
+    for s in range(k):
+        a1 = equilibrium(CFG, h2b[s], db[s], vmb[s])
+        assert _rel(ab.energy[s], a1.energy) < REL, s
+        assert _rel(ab.t_total[s], a1.t_total) < REL, s
+        assert bool(ab.feasible[s]) == bool(a1.feasible), s
+
+
+def test_batched_broadcasts_shared_inputs():
+    """[N] data sizes / v_max broadcast across the K channel draws."""
+    k = 8
+    h2b, _, _ = _batch(k)
+    d = jnp.full((N,), 200.0)
+    vmax = jnp.full((N,), 0.5)
+    ab = batched_equilibrium(CFG, h2b, d, vmax)
+    a0 = equilibrium(CFG, h2b[0], d, vmax)
+    assert _rel(ab.energy[0], a0.energy) < REL
+
+
+def test_batched_wo_dt_matches_per_instance():
+    k = 8
+    h2b, db, _ = _batch(k, seed0=300)
+    ab = batched_wo_dt_allocation(CFG, h2b, db)
+    assert bool(jnp.all(ab.v == 0.0))
+    a0 = wo_dt_allocation(CFG, h2b[0], db[0])
+    assert _rel(ab.energy[0], a0.energy) < REL
+
+
+# ---------------------------------------------------------------------------
+# (c) feasibility invariant
+# ---------------------------------------------------------------------------
+def test_deadline_met_when_feasible():
+    """max(t_cmp + t_com) ≤ t_max·1.001 whenever a feasible iterate exists
+    (the best-iterate safeguard prefers feasible iterates lexicographically)."""
+    k = 64
+    h2b, db, vmb = _batch(k, seed0=500)
+    ab = batched_equilibrium(CFG, h2b, db, vmb)
+    worst = jnp.max(ab.t_cmp + ab.t_com, axis=-1)
+    feas = ab.feasible
+    assert bool(jnp.any(feas)), "expected some feasible draws in the batch"
+    assert bool(jnp.all(jnp.where(feas, worst, 0.0) <= CFG.t_max * 1.001)), \
+        worst[feas]
+
+
+def test_allocation_is_pytree():
+    """Whole allocations cross jit boundaries (engine contract)."""
+    h2, d, vmax = _draw(0)
+    leaves = jax.tree_util.tree_leaves(equilibrium(CFG, h2, d, vmax))
+    assert len(leaves) == 15     # every Allocation field is a data leaf
+
+    @jax.jit
+    def energy_of(alloc: Allocation):
+        return alloc.energy + 0.0
+
+    a = equilibrium(CFG, h2, d, vmax)
+    assert float(energy_of(a)) == pytest.approx(float(a.energy))

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # offline: seeded example replay (tests/_prop.py)
+    from _prop import given, settings, strategies as st
 
 from repro.core.channel import noise_power, sample_channel_gains, sample_positions
 from repro.core.dinkelbach import dinkelbach_power, successive_power

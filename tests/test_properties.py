@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # offline: seeded example replay (tests/_prop.py)
+    from _prop import given, settings, strategies as st
 
 from repro.core.aggregation import dt_aggregate, fedavg
 from repro.kernels.ref import ssd_scan_ref, swa_attention_ref

@@ -1,0 +1,138 @@
+"""Solver edge-case regressions guarding the invariants the trace-safe
+engine refactor must preserve (ISSUE 1 satellite):
+
+  * follower saturated branch (Σα > 1 → Eq. 29): Σα* = 1, equal DT finish
+    times, and continuity into the slack branch;
+  * ``wo_dt_allocation`` (v ≡ 0): no DT load, energy ≥ the DT-assisted
+    equilibrium;
+  * ``dinkelbach_power`` at the p_min/p_max box boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import noise_power, sample_channel_gains, sample_positions
+from repro.core.dinkelbach import dinkelbach_power
+from repro.core.stackelberg import (GameConfig, equilibrium, follower_alpha,
+                                    wo_dt_allocation)
+
+CFG = GameConfig()
+
+
+def _channels(seed, n=5):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    h2 = sample_channel_gains(k2, sample_positions(k1, n))
+    return jnp.sort(h2)[::-1]
+
+
+# ---------------------------------------------------------------------------
+# follower_alpha: saturated branch (Eq. 29)
+# ---------------------------------------------------------------------------
+def test_follower_saturated_sums_to_one_with_equal_finish():
+    c, f_s = 1e7, 100e9
+    d_hat = jnp.array([5000., 12000., 3000.])     # Σ c·D̂ / (t·f_S) > 1
+    t_total = 0.1
+    alpha, t_s = follower_alpha(c, d_hat, t_total, f_s)
+    assert float(jnp.sum(c * d_hat / (t_total * f_s))) > 1.0  # branch taken
+    assert float(jnp.sum(alpha)) == pytest.approx(1.0, abs=1e-6)  # Eq. 29
+    t_n = c * d_hat / (alpha * f_s)
+    assert jnp.allclose(t_n, t_n[0], rtol=1e-5)   # Theorem 1: equal finish
+    assert float(t_s) == pytest.approx(float(t_n[0]), rel=1e-5)
+    assert float(t_s) > t_total                    # server is the straggler
+
+
+def test_follower_branch_continuity():
+    """At the saturation threshold the two branches coincide (no jump)."""
+    c, f_s = 1e7, 100e9
+    d_hat = jnp.array([400., 600.])
+    t_star = float(jnp.sum(c * d_hat) / f_s)       # Σα == 1 exactly here
+    a_lo, _ = follower_alpha(c, d_hat, t_star * (1 - 1e-6), f_s)
+    a_hi, _ = follower_alpha(c, d_hat, t_star * (1 + 1e-6), f_s)
+    assert jnp.allclose(a_lo, a_hi, rtol=1e-4)
+
+
+def test_follower_vmaps_over_batch():
+    """Theorem-1 closed form is trace-safe: vmap across realizations."""
+    c, f_s = 1e7, 100e9
+    d_hat = jnp.array([[50., 120.], [4000., 8000.]])   # slack row, saturated row
+    t_total = jnp.array([1.0, 0.5])
+    alpha, t_s = jax.vmap(lambda d, t: follower_alpha(c, d, t, f_s))(d_hat,
+                                                                     t_total)
+    assert float(jnp.sum(alpha[0])) < 1.0              # Eq. 26 row
+    assert float(jnp.sum(alpha[1])) == pytest.approx(1.0, abs=1e-6)  # Eq. 29
+
+
+# ---------------------------------------------------------------------------
+# wo_dt_allocation: v ≡ 0
+# ---------------------------------------------------------------------------
+def test_wo_dt_zero_mapping_and_zero_dt_load():
+    h2 = _channels(7)
+    d = jnp.array([200., 250., 300., 220., 180.])
+    a = wo_dt_allocation(CFG, h2, d)
+    assert bool(jnp.all(a.v == 0.0))
+    assert bool(jnp.all(a.alpha == 0.0))          # no mapped data → no DT share
+    assert float(jnp.max(a.t_dt)) == pytest.approx(0.0, abs=1e-9)
+    # round latency is then purely the client path
+    assert float(a.t_total) == pytest.approx(
+        float(jnp.max(a.t_cmp + a.t_com)), rel=1e-6)
+
+
+def test_wo_dt_dominated_by_dt_equilibrium():
+    """v_max > 0 can only help the leader (energy ↓) — refactor must keep
+    the paper's premise intact."""
+    h2 = _channels(8)
+    d = jnp.array([300., 350., 400., 320., 280.])
+    a_dt = equilibrium(CFG, h2, d, jnp.full((5,), 0.6))
+    a_wo = wo_dt_allocation(CFG, h2, d)
+    assert float(a_dt.energy) < float(a_wo.energy)
+
+
+# ---------------------------------------------------------------------------
+# dinkelbach_power at the box boundaries
+# ---------------------------------------------------------------------------
+def test_dinkelbach_pmax_boundary():
+    """A nearly-binding deadline pushes the rate-floor power past p_max:
+    the solver must pin p = p_max (lo = min(p_floor, p_max), Eq. 43)."""
+    f_eff, d, bw = 1e12, 1e6, 1e6
+    g_tight = 0.02            # p_floor = (2^50−1)/1e12 ≈ 1.1e3 ≫ p_max
+    p, q, _ = dinkelbach_power(d, g_tight, f_eff, bw, 0.01, 0.1)
+    assert float(p) == pytest.approx(0.1, rel=1e-6)
+    assert float(q) > 0
+
+
+def test_dinkelbach_floor_binding_near_pmax():
+    """Rate floor just inside the box: optimum sits exactly at the floor
+    (R/U is decreasing in p, so the smallest feasible power wins)."""
+    f_eff, d, bw = 1e12, 1e6, 1e6
+    g = 0.0275                # p_floor ≈ 0.088, inside [0.01, 0.1]
+    need = float((2.0 ** (d / (g * bw)) - 1.0) / f_eff)
+    assert 0.01 < need < 0.1
+    p, q, _ = dinkelbach_power(d, g, f_eff, bw, 0.01, 0.1)
+    assert float(p) == pytest.approx(need, rel=1e-4)
+
+
+def test_dinkelbach_pmin_boundary():
+    """A huge effective gain makes the energy optimum interior point fall
+    below p_min with a slack floor: the solver must pin p = p_min."""
+    f_eff, d, bw = 1e16, 1e6, 1e6
+    p, q, _ = dinkelbach_power(d, 9.0, f_eff, bw, 0.01, 0.1)
+    assert float(p) == pytest.approx(0.01, rel=1e-6)
+    # q must equal the ratio at the boundary point
+    rate = bw * jnp.log2(1.0 + 0.01 * f_eff)
+    assert float(q) == pytest.approx(float(rate / (0.01 * d)), rel=1e-4)
+
+
+def test_dinkelbach_boundaries_inside_jit_and_vmap():
+    """Boundary pinning survives jit+vmap (the batched-engine context)."""
+    f_effs = jnp.array([1e12, 1e16])
+    gs = jnp.array([0.02, 9.0])
+
+    @jax.jit
+    def solve(f_eff, g):
+        p, q, _ = dinkelbach_power(1e6, g, f_eff, 1e6, 0.01, 0.1)
+        return p
+
+    ps = jax.vmap(solve)(f_effs, gs)
+    assert float(ps[0]) == pytest.approx(0.1, rel=1e-6)
+    assert float(ps[1]) == pytest.approx(0.01, rel=1e-6)

@@ -157,5 +157,7 @@ def test_hlo_walker_trip_count():
     walk = HloCost(compiled.as_text()).entry_cost()
     one_matmul = 2 * 64 * 64 * 64
     assert walk["flops"] >= 8 * one_matmul * 0.99, walk["flops"]
-    raw = compiled.cost_analysis()["flops"]
-    assert raw < 2 * one_matmul   # raw undercounts — the reason walker exists
+    raw = compiled.cost_analysis()
+    if isinstance(raw, (list, tuple)):   # pre-0.4.x API returns [dict]
+        raw = raw[0]
+    assert raw["flops"] < 2 * one_matmul  # raw undercounts — why walker exists
