@@ -78,13 +78,15 @@ def mc_channel_draws(key, k: int, n: int):
 def mc_equilibrium_stats(game: GameConfig, key, k: int, n: int, d, vmax,
                          scheme: str = "proposed", epsilon: float = 0.0):
     """Mean/std total cost over K channel realizations, solved in ONE
-    batched XLA call via the jitted Stackelberg engine."""
+    batched XLA call — works for every scheme (proposed/ideal/wo_dt/oma/
+    oma_tdma/random) now that the baselines have vmapped bodies."""
     from repro.core.fl_round import allocate_batched
     h2_batch = mc_channel_draws(key, k, n)
     alloc = allocate_batched(scheme, game, h2_batch,
                              jnp.broadcast_to(d, (k, n)),
                              jnp.broadcast_to(vmax, (k, n)),
-                             epsilon=epsilon)
+                             epsilon=epsilon,
+                             key=jax.random.fold_in(key, 1))
     cost = alloc.t_total + alloc.energy
     return {
         "mean_cost": float(jnp.mean(cost)),

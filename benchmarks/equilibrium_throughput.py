@@ -5,17 +5,30 @@ execution paths at K ∈ {1, 64, 1024} independent 5-client realizations:
     ``float()``/``bool()`` device syncs, one instance at a time;
   * jit    — ``equilibrium``: the whole Alg.-2 alternation as one XLA
     program, still dispatched per instance;
-  * vmap   — ``batched_equilibrium``: all K realizations in ONE XLA call.
+  * vmap   — ``batched_equilibrium``: all K realizations in ONE XLA call;
+
+plus a ``sweep`` section timing the fig9-style config grid (10 points ×
+K=256 draws):
+
+  * static — the PR-1 design re-created locally: physics floats as STATIC
+    jit args, so every grid point pays a fresh XLA compile (timed cold —
+    that compile tax was the real cost of a sweep);
+  * sweep  — ``sweep_equilibrium``: physics as traced ``GamePhysics`` rows,
+    the whole grid in one dispatch of one executable (timed cold = compile
+    + run, and warm), with the recompile counts and device layout recorded.
 
 Writes ``BENCH_equilibrium.json`` (repo root) so later PRs can track the
-throughput trajectory; the legacy path is measured on a subsample at large
-K (it is the slow baseline — running it 1024× would dominate the bench).
+throughput trajectory (``scripts/check_bench.py`` gates on it); the legacy
+path is measured on a subsample at large K (it is the slow baseline —
+running it 1024× would dominate the bench).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +38,9 @@ from .common import mc_channel_draws
 N_CLIENTS = 5
 K_VALUES = (1, 64, 1024)
 LEGACY_CAP = 16          # legacy instances actually timed at large K
+SWEEP_K = 256            # draws per config point in the sweep section
+SWEEP_TMAX = (4.0, 6.0, 8.0, 10.0, 12.0)
+SWEEP_MBITS = (0.5e6, 2.0e6)     # × SWEEP_TMAX → the 10-point fig9 grid
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_equilibrium.json")
 
@@ -43,6 +59,71 @@ def _rate(elapsed_s: float, solves: int) -> float:
     return solves / max(elapsed_s, 1e-12)
 
 
+def _sweep_section():
+    """Time the 10-point fig9 grid × K=256: per-config static-jit re-creation
+    (one compile per point, the PR-1 design) vs the traced-config sweep
+    engine (one compile for the whole grid)."""
+    from repro.core.stackelberg import (GameConfig, TRACE_COUNTS, _solve,
+                                        sharding_layout, sweep_equilibrium)
+    base = GameConfig()
+    configs = [dataclasses.replace(base, t_max=tm, model_bits=mb)
+               for mb in SWEEP_MBITS for tm in SWEEP_TMAX]
+    h2 = mc_channel_draws(jax.random.PRNGKey(77), SWEEP_K, N_CLIENTS)
+    d = jnp.full((N_CLIENTS,), 200.0)
+    vmax = jnp.full((N_CLIENTS,), 0.5)
+    n_solves = len(configs) * SWEEP_K
+
+    # PR-1 design, re-created: the hashable GameConfig is the jit cache key,
+    # so every distinct physics point compiles its own executable.
+    @partial(jax.jit, static_argnames=("cfg", "max_iter"))
+    def per_config_static(cfg, h2_b, d_b, vm_b, tol, max_iter=20):
+        one = lambda h, dd, vm: _solve(cfg, h, dd, vm, 0.0, max_iter, tol,
+                                       cfg.dinkelbach_inner)
+        return jax.vmap(one)(h2_b, d_b, vm_b)
+
+    d_b = jnp.broadcast_to(d, (SWEEP_K, N_CLIENTS))
+    vm_b = jnp.broadcast_to(vmax, (SWEEP_K, N_CLIENTS))
+    tol = jnp.asarray(1e-6, h2.dtype)
+    t0 = time.perf_counter()
+    for cfg in configs:           # cold: 10 compiles — the real sweep cost
+        out = per_config_static(cfg, h2, d_b, vm_b, tol)
+    jax.block_until_ready(out.energy)
+    t_static = time.perf_counter() - t0
+
+    before = TRACE_COUNTS["sweep_equilibrium"]
+    t0 = time.perf_counter()
+    out = sweep_equilibrium(configs, h2, d, vmax)
+    jax.block_until_ready(out.energy)
+    t_sweep_cold = time.perf_counter() - t0
+    # warm path: best of 5 — this feeds a gated solves/sec metric and a
+    # single ~10 ms sample would make the -20% gate flaky by construction
+    t_sweep_warm = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        out = sweep_equilibrium(configs, h2, d, vmax)
+        jax.block_until_ready(out.energy)
+        t_sweep_warm = min(t_sweep_warm, time.perf_counter() - t0)
+    assert bool(jnp.all(jnp.isfinite(out.energy))), "non-finite sweep energy"
+    recompiles = TRACE_COUNTS["sweep_equilibrium"] - before
+
+    return {
+        "config_points": len(configs),
+        "K": SWEEP_K,
+        "n_clients": N_CLIENTS,
+        "grid": "t_max x model_bits (fig9-style)",
+        "static_jit_wall_s": round(t_static, 3),
+        "static_jit_solves_per_sec": round(_rate(t_static, n_solves), 2),
+        "sweep_cold_wall_s": round(t_sweep_cold, 3),
+        "sweep_warm_wall_s": round(t_sweep_warm, 3),
+        "sweep_solves_per_sec": round(_rate(t_sweep_warm, n_solves), 2),
+        "speedup_sweep_cold_vs_static": round(t_static / t_sweep_cold, 2),
+        "speedup_sweep_warm_vs_static": round(t_static / t_sweep_warm, 2),
+        "sweep_recompiles": int(recompiles),
+        "devices": len(jax.devices()),
+        "k_axis_shards": sharding_layout(SWEEP_K),
+    }
+
+
 def run():
     from repro.core.stackelberg import (GameConfig, batched_equilibrium,
                                         equilibrium, equilibrium_eager)
@@ -52,30 +133,46 @@ def run():
     for k in K_VALUES:
         h2, d, vmax = _inputs(k)
 
+        # All three paths take the best of REPS timed passes: a single
+        # pass on a shared box is dominated by scheduler noise, and mixing
+        # methodologies (best-of-N vs one-shot) would skew the tracked
+        # speedup ratios that scripts/check_bench.py gates on.
+        REPS = 3
+
         # legacy eager loop (subsampled at large K — it is the baseline)
         k_legacy = min(k, LEGACY_CAP)
         equilibrium_eager(cfg, h2[0], d[0], vmax[0])        # warm caches
-        t0 = time.perf_counter()
-        for i in range(k_legacy):
-            equilibrium_eager(cfg, h2[i], d[i], vmax[i])
-        legacy_sps = _rate(time.perf_counter() - t0, k_legacy)
+        legacy_sps = 0.0
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            for i in range(k_legacy):
+                equilibrium_eager(cfg, h2[i], d[i], vmax[i])
+            legacy_sps = max(legacy_sps,
+                             _rate(time.perf_counter() - t0, k_legacy))
 
         # jitted engine, dispatched per instance
         k_jit = min(k, 64)
         jax.block_until_ready(equilibrium(cfg, h2[0], d[0], vmax[0]).energy)
-        t0 = time.perf_counter()
-        for i in range(k_jit):
-            out = equilibrium(cfg, h2[i], d[i], vmax[i])
-        jax.block_until_ready(out.energy)
-        jit_sps = _rate(time.perf_counter() - t0, k_jit)
+        jit_sps = 0.0
+        for _ in range(REPS):
+            t0 = time.perf_counter()
+            for i in range(k_jit):
+                out = equilibrium(cfg, h2[i], d[i], vmax[i])
+            jax.block_until_ready(out.energy)
+            jit_sps = max(jit_sps, _rate(time.perf_counter() - t0, k_jit))
 
-        # vmapped engine: one XLA call for all K
+        # vmapped engine: one XLA call for all K.  Best-of-5 repetitions:
+        # a single rep is dominated by scheduler noise at small K on a
+        # shared box (the gate in scripts/check_bench.py needs a stable
+        # number, not one lucky/unlucky dispatch).
         out = batched_equilibrium(cfg, h2, d, vmax)
         jax.block_until_ready(out.energy)                   # compile + warm
-        t0 = time.perf_counter()
-        out = batched_equilibrium(cfg, h2, d, vmax)
-        jax.block_until_ready(out.energy)
-        vmap_sps = _rate(time.perf_counter() - t0, k)
+        vmap_sps = 0.0
+        for _ in range(5):
+            t0 = time.perf_counter()
+            out = batched_equilibrium(cfg, h2, d, vmax)
+            jax.block_until_ready(out.energy)
+            vmap_sps = max(vmap_sps, _rate(time.perf_counter() - t0, k))
         assert bool(jnp.all(jnp.isfinite(out.energy))), "non-finite energies"
 
         results.append({
@@ -90,9 +187,11 @@ def run():
             "speedup_vmap_vs_legacy": round(vmap_sps / legacy_sps, 2),
         })
 
+    sweep = _sweep_section()
+
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "stackelberg_equilibrium_throughput",
-                   "results": results}, f, indent=2)
+                   "results": results, "sweep": sweep}, f, indent=2)
 
     elapsed_us = (time.perf_counter() - t_start) * 1e6
     big = results[-1]
@@ -101,7 +200,10 @@ def run():
              f"jit_sps={big['jit_solves_per_sec']};"
              f"vmap_sps={big['vmap_solves_per_sec']};"
              f"vmap_speedup={big['speedup_vmap_vs_legacy']}x;"
-             f"target_20x_met={big['speedup_vmap_vs_legacy'] >= 20}")]
+             f"target_20x_met={big['speedup_vmap_vs_legacy'] >= 20};"
+             f"sweep_recompiles={sweep['sweep_recompiles']};"
+             f"sweep_vs_static={sweep['speedup_sweep_cold_vs_static']}x;"
+             f"sweep_5x_met={sweep['speedup_sweep_cold_vs_static'] >= 5}")]
 
 
 if __name__ == "__main__":

@@ -20,17 +20,21 @@ ROUNDS = 16
 EPSILONS = (0.0, 0.3, 0.6)
 
 
-def _mc_dt_server_share(eps: float, k: int = 128, n: int = 5) -> float:
-    """Mean total DT frequency share Σα over K realizations — one batched
-    solve of the jitted Stackelberg engine."""
-    from repro.core.stackelberg import GameConfig, batched_equilibrium
+def _mc_dt_server_shares(epsilons, k: int = 128, n: int = 5):
+    """Mean total DT frequency share Σα over K realizations, for ALL
+    deviation points at once: ε rides the sweep engine's config axis, so
+    the whole precheck is ONE XLA dispatch (|ε| configs × K draws)."""
+    from repro.core.stackelberg import GameConfig, sweep_equilibrium
     from .common import mc_channel_draws
     key = jax.random.PRNGKey(42)
     h2 = mc_channel_draws(key, k, n)
     d = jnp.full((n,), 200.0)
     vmax = jnp.full((n,), 0.5)
-    alloc = batched_equilibrium(GameConfig(), h2, d, vmax, epsilon=eps)
-    return float(jnp.mean(jnp.sum(alloc.alpha, axis=-1)))
+    cfg = GameConfig()
+    alloc = sweep_equilibrium([cfg] * len(epsilons), h2, d, vmax,
+                              epsilon=jnp.asarray(epsilons))
+    share = jnp.mean(jnp.sum(alloc.alpha, axis=-1), axis=-1)   # [C]
+    return [float(s) for s in share]
 
 
 def run():
@@ -55,7 +59,7 @@ def run():
     gap_m = max(results[("mnist", 0.0)][-5:]) - max(results[("mnist", 0.6)][-5:])
     gap_c = max(results[("cifar", 0.0)][-5:]) - max(results[("cifar", 0.6)][-5:])
     checks.append(f"cifar_more_sensitive={gap_c >= gap_m - 0.05}")
-    shares = [_mc_dt_server_share(e) for e in EPSILONS]
+    shares = _mc_dt_server_shares(EPSILONS)
     checks.append(f"mc_dt_server_share_monotone_in_eps="
                   f"{all(a < b for a, b in zip(shares, shares[1:]))}")
     return [("fig6_dt_deviation_sweep", elapsed_us, "|".join(checks))]

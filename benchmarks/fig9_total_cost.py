@@ -1,7 +1,13 @@
 """Fig. 9 — total cost (latency + energy) vs (a) model size d_n,
 (b) #selected clients N, (c) bandwidth B — proposed vs random / W-O DT / OMA,
 plus (d) a Monte-Carlo column over K channel realizations solved in one
-batched XLA call by the jitted Stackelberg engine.
+batched XLA call per scheme (every baseline now has a vmapped body).
+
+The (a)/(c) config grids run through ``sweep_allocation``: each scheme's
+whole sweep (C config points × the channel draw) is ONE dispatch of ONE
+compiled executable — distinct d_n / B values are traced ``GamePhysics``
+rows, not compile keys.  Only (b) recompiles across points (N changes the
+shape).
 
 Claims verified: cost grows with d_n and N; cost falls then saturates with B;
 proposed ≤ all baselines throughout; MC mean confirms DT energy saving over
@@ -17,6 +23,7 @@ import jax.numpy as jnp
 from .common import mc_equilibrium_stats, save_csv
 
 MC_DRAWS = 256   # channel realizations per MC point (one batched solve each)
+SCHEMES = ("proposed", "random", "wo_dt", "oma")
 
 
 def _setup(n: int, seed: int = 3, pool: int = 20):
@@ -34,59 +41,65 @@ def _setup(n: int, seed: int = 3, pool: int = 20):
     return h2, d, vmax
 
 
-def _cost(alloc):
-    return float(alloc.t_total + alloc.energy)
+def _sweep_costs(configs, h2, d, vmax, key):
+    """Per-scheme total cost along a config grid: one ``sweep_allocation``
+    dispatch per scheme over (C configs × K=1 draw).  Returns
+    {scheme: [C] costs}."""
+    from repro.core.fl_round import sweep_allocation
+    out = {}
+    for scheme in SCHEMES:
+        alloc = sweep_allocation(scheme, configs, h2[None, :], d, vmax,
+                                 key=key)
+        cost = alloc.t_total[:, 0] + alloc.energy[:, 0]
+        out[scheme] = [float(c) for c in cost]
+    return out
 
 
-def _all_schemes(game, h2, d, vmax, key):
-    from repro.core.stackelberg import (equilibrium, oma_allocation,
-                                        random_allocation, wo_dt_allocation)
-    return {
-        "proposed": _cost(equilibrium(game, h2, d, vmax)),
-        "random": _cost(random_allocation(game, key, h2, d, vmax)),
-        "wo_dt": _cost(wo_dt_allocation(game, h2, d)),
-        "oma": _cost(oma_allocation(game, h2, d, vmax)),
-    }
+def _batched_costs(game, h2, d, vmax, key):
+    """Single-point costs per scheme (K=1 batched call each)."""
+    from repro.core.fl_round import allocate_batched
+    out = {}
+    for scheme in SCHEMES:
+        alloc = allocate_batched(scheme, game, h2[None, :], d, vmax, key=key)
+        out[scheme] = float(alloc.t_total[0] + alloc.energy[0])
+    return out
 
 
 def run():
+    from repro.core.channel import noise_power
     from repro.core.stackelberg import GameConfig
     t0 = time.perf_counter()
     key = jax.random.PRNGKey(0)
     base = GameConfig()
 
-    # (a) vs model size d_n
+    # (a) vs model size d_n — one compiled sweep per scheme
     h2, d, vmax = _setup(5)
-    rows_a = []
-    for dn_mbit in (0.5, 1.0, 1.5, 2.0, 2.5):
-        game = dataclasses.replace(base, model_bits=dn_mbit * 1e6)
-        c = _all_schemes(game, h2, d, vmax, key)
-        rows_a.append([dn_mbit] + [round(c[s], 4) for s in
-                                   ("proposed", "random", "wo_dt", "oma")])
+    dns = (0.5, 1.0, 1.5, 2.0, 2.5)
+    cfgs_a = [dataclasses.replace(base, model_bits=dn * 1e6) for dn in dns]
+    costs_a = _sweep_costs(cfgs_a, h2, d, vmax, key)
+    rows_a = [[dn] + [round(costs_a[s][i], 4) for s in SCHEMES]
+              for i, dn in enumerate(dns)]
     save_csv("fig9a_cost_vs_dn", "dn_mbit,proposed,random,wo_dt,oma", rows_a)
 
-    # (b) vs number of selected clients N
+    # (b) vs number of selected clients N (shape changes → per-N dispatch)
     rows_b = []
     for n in (3, 5, 7, 9):
         h2n, dn, vmaxn = _setup(n)
-        c = _all_schemes(base, h2n, dn, vmaxn, key)
-        rows_b.append([n] + [round(c[s], 4) for s in
-                             ("proposed", "random", "wo_dt", "oma")])
+        c = _batched_costs(base, h2n, dn, vmaxn, key)
+        rows_b.append([n] + [round(c[s], 4) for s in SCHEMES])
     save_csv("fig9b_cost_vs_n", "n,proposed,random,wo_dt,oma", rows_b)
 
-    # (c) vs bandwidth B
-    rows_c = []
-    from repro.core.channel import noise_power
-    for b_mhz in (0.5, 1.0, 2.0, 4.0, 8.0):
-        game = dataclasses.replace(base, bandwidth=b_mhz * 1e6,
-                                   sigma2=noise_power(b_mhz * 1e6))
-        c = _all_schemes(game, h2, d, vmax, key)
-        rows_c.append([b_mhz] + [round(c[s], 4) for s in
-                                 ("proposed", "random", "wo_dt", "oma")])
+    # (c) vs bandwidth B — same compiled sweep executables as (a)
+    bws = (0.5, 1.0, 2.0, 4.0, 8.0)
+    cfgs_c = [dataclasses.replace(base, bandwidth=b * 1e6,
+                                  sigma2=noise_power(b * 1e6)) for b in bws]
+    costs_c = _sweep_costs(cfgs_c, h2, d, vmax, key)
+    rows_c = [[b] + [round(costs_c[s][i], 4) for s in SCHEMES]
+              for i, b in enumerate(bws)]
     save_csv("fig9c_cost_vs_bw", "b_mhz,proposed,random,wo_dt,oma", rows_c)
 
-    # (d) Monte-Carlo over the channel distribution: proposed vs W/O-DT,
-    # K = MC_DRAWS realizations per point, each a single vmapped solve
+    # (d) Monte-Carlo over the channel distribution, K = MC_DRAWS
+    # realizations per point — ONE batched solve per scheme (baselines too)
     rows_d = []
     for n in (3, 5, 7):
         _, dn, vmaxn = _setup(n)
@@ -95,13 +108,21 @@ def run():
                                     scheme="proposed")
         wo = mc_equilibrium_stats(base, mk, MC_DRAWS, n, dn, vmaxn,
                                   scheme="wo_dt")
+        oma = mc_equilibrium_stats(base, mk, MC_DRAWS, n, dn, vmaxn,
+                                   scheme="oma")
+        rnd = mc_equilibrium_stats(base, mk, MC_DRAWS, n, dn, vmaxn,
+                                   scheme="random")
         rows_d.append([n, round(prop["mean_cost"], 4),
                        round(prop["std_cost"], 4),
                        round(wo["mean_cost"], 4),
+                       round(oma["mean_cost"], 4),
+                       round(rnd["mean_cost"], 4),
                        round(prop["feasible_frac"], 3)])
     save_csv("fig9d_mc_cost", "n,proposed_mean,proposed_std,wo_dt_mean,"
-             "proposed_feasible_frac", rows_d)
+             "oma_mean,random_mean,proposed_feasible_frac", rows_d)
     mc_dt_saves = all(r[1] <= r[3] + 1e-6 for r in rows_d)
+    mc_prop_best = all(r[1] <= min(r[3], r[4], r[5]) * 1.05 + 1e-6
+                       for r in rows_d)
 
     elapsed_us = (time.perf_counter() - t0) * 1e6
     prop_a = [r[1] for r in rows_a]
@@ -118,4 +139,5 @@ def run():
              f"grows_with_dn={grows_dn};falls_with_bw={falls_bw};"
              f"proposed_best_within_5pct={best_tol};"
              f"proposed_best_at_operating_load={best_loaded};"
-             f"mc_k{MC_DRAWS}_dt_saves={mc_dt_saves}")]
+             f"mc_k{MC_DRAWS}_dt_saves={mc_dt_saves};"
+             f"mc_proposed_best={mc_prop_best}")]

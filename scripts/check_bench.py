@@ -1,0 +1,94 @@
+"""Benchmark regression gate: fail if the Stackelberg engine's measured
+throughput in ``BENCH_equilibrium.json`` regressed more than TOLERANCE
+vs the committed baseline (``git show HEAD:BENCH_equilibrium.json``).
+
+Gated metrics (higher is better):
+  * ``results[].vmap_solves_per_sec``  — the K-axis Monte-Carlo path;
+  * ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine.
+
+Exit code 0 = pass (or nothing to compare: missing file, no git baseline,
+or baseline predates a metric).  Exit 1 = a gated metric regressed >20%.
+Run directly or let ``scripts/dev_smoke.py`` invoke it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_equilibrium.json")
+TOLERANCE = 0.20          # >20% drop in solves/sec fails the gate
+
+
+def _load_current():
+    if not os.path.exists(BENCH_JSON):
+        return None
+    with open(BENCH_JSON) as f:
+        return json.load(f)
+
+
+def _load_committed():
+    try:
+        blob = subprocess.run(
+            ["git", "show", "HEAD:BENCH_equilibrium.json"],
+            cwd=REPO_ROOT, capture_output=True, text=True, check=True,
+        ).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        return None
+
+
+def _gated_metrics(doc) -> dict:
+    """{label: solves_per_sec} for every gated metric present in ``doc``."""
+    out = {}
+    for row in doc.get("results", []):
+        val = row.get("vmap_solves_per_sec")
+        if val:
+            out[f"vmap_K{row.get('K')}"] = float(val)
+    sweep = doc.get("sweep") or {}
+    if sweep.get("sweep_solves_per_sec"):
+        out["sweep"] = float(sweep["sweep_solves_per_sec"])
+    return out
+
+
+def check(verbose: bool = True) -> int:
+    cur, ref = _load_current(), _load_committed()
+    if cur is None or ref is None:
+        if verbose:
+            why = "no BENCH_equilibrium.json" if cur is None else \
+                  "no committed baseline (git show failed)"
+            print(f"check_bench: SKIP ({why})")
+        return 0
+    cur_m, ref_m = _gated_metrics(cur), _gated_metrics(ref)
+    failures, lines = [], []
+    for label, ref_val in sorted(ref_m.items()):
+        cur_val = cur_m.get(label)
+        if cur_val is None:
+            lines.append(f"  {label}: dropped from bench (baseline "
+                         f"{ref_val:.0f}/s) — not gated")
+            continue
+        ratio = cur_val / max(ref_val, 1e-9)
+        status = "ok" if ratio >= 1.0 - TOLERANCE else "REGRESSED"
+        lines.append(f"  {label}: {cur_val:.0f}/s vs baseline "
+                     f"{ref_val:.0f}/s ({ratio:.2f}x) {status}")
+        if status == "REGRESSED":
+            failures.append(label)
+    if verbose:
+        print("check_bench: solves/sec vs committed baseline "
+              f"(tolerance -{TOLERANCE:.0%})")
+        for line in lines:
+            print(line)
+    if failures:
+        print(f"check_bench: FAIL — regressed >{TOLERANCE:.0%}: "
+              f"{', '.join(failures)}")
+        return 1
+    if verbose:
+        print("check_bench: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(check())

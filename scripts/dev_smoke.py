@@ -67,8 +67,11 @@ print("ALL FAMILIES OK")
 
 # batched Stackelberg equilibrium engine (core FL hot path): K realizations
 # in one vmapped XLA call — exercises the jit/vmap throughput path in smoke
+import dataclasses
 from repro.core.channel import sample_sic_channel_batch
-from repro.core.stackelberg import GameConfig, batched_equilibrium
+from repro.core.fl_round import allocate_batched
+from repro.core.stackelberg import (GameConfig, TRACE_COUNTS,
+                                    batched_equilibrium, sweep_equilibrium)
 
 K, N = 8, 5
 h2b = sample_sic_channel_batch(jax.random.PRNGKey(7), K, N)
@@ -77,3 +80,24 @@ alloc = batched_equilibrium(GameConfig(), h2b, jnp.full((N,), 200.0),
 assert alloc.energy.shape == (K,) and bool(jnp.all(jnp.isfinite(alloc.energy)))
 assert bool(jnp.all(jnp.isfinite(alloc.t_total)))
 print(f"batched equilibrium OK: K={K} mean_energy={float(alloc.energy.mean()):.4f}")
+
+# sweep engine: a 4-point config grid × K draws in one dispatch, one trace
+cfgs = [dataclasses.replace(GameConfig(), t_max=t) for t in (6., 8., 10., 12.)]
+before = TRACE_COUNTS["sweep_equilibrium"]
+sw = sweep_equilibrium(cfgs, h2b, jnp.full((N,), 200.0), jnp.full((N,), 0.5))
+assert sw.energy.shape == (len(cfgs), K)
+assert TRACE_COUNTS["sweep_equilibrium"] - before == 1, "sweep retraced"
+print(f"sweep equilibrium OK: {len(cfgs)} configs x K={K}, 1 trace")
+
+# every scheme has a batched Monte-Carlo path now
+for scheme in ("proposed", "wo_dt", "oma", "oma_tdma", "random"):
+    a = allocate_batched(scheme, GameConfig(), h2b, jnp.full((N,), 200.0),
+                         jnp.full((N,), 0.5), key=jax.random.PRNGKey(1))
+    assert a.energy.shape == (K,) and bool(jnp.all(jnp.isfinite(a.energy))), scheme
+print("allocate_batched OK for all schemes")
+
+# benchmark regression gate (no-op when BENCH json / git baseline is absent)
+import pathlib, subprocess, sys
+_root = pathlib.Path(__file__).resolve().parents[1]
+subprocess.run([sys.executable, str(_root / "scripts" / "check_bench.py")],
+               check=True)

@@ -8,10 +8,17 @@ from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
                          init_reputation, select_clients)
 from .reputation import reputation as reputation_score
 from . import reputation  # keep the submodule accessible (not the function)
-from .stackelberg import (Allocation, GameConfig, batched_equilibrium,
-                          batched_wo_dt_allocation, equilibrium,
-                          equilibrium_eager, follower_alpha, leader_f,
-                          leader_v, oma_allocation, random_allocation,
+from .fl_round import allocate, allocate_batched, sweep_allocation
+from .stackelberg import (Allocation, GameConfig, GamePhysics,
+                          batched_equilibrium, batched_oma_allocation,
+                          batched_oma_tdma_allocation,
+                          batched_random_allocation, batched_wo_dt_allocation,
+                          equilibrium, equilibrium_eager, follower_alpha,
+                          leader_f, leader_v, oma_allocation,
+                          oma_tdma_allocation, random_allocation,
+                          stack_physics, sweep_equilibrium,
+                          sweep_oma_allocation, sweep_oma_tdma_allocation,
+                          sweep_random_allocation, sweep_wo_dt_allocation,
                           wo_dt_allocation)
 
 __all__ = [
@@ -19,8 +26,13 @@ __all__ = [
     "sample_round_channels", "dinkelbach_power", "successive_power",
     "FLConfig", "FLState", "run_round", "run_training", "BENCHMARK_WEIGHTS",
     "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
-    "reputation_score", "select_clients", "Allocation", "GameConfig", "equilibrium",
-    "batched_equilibrium", "batched_wo_dt_allocation", "equilibrium_eager",
-    "follower_alpha", "leader_f", "leader_v", "oma_allocation",
-    "random_allocation", "wo_dt_allocation",
+    "reputation_score", "select_clients", "Allocation", "GameConfig",
+    "GamePhysics", "stack_physics", "equilibrium", "batched_equilibrium",
+    "sweep_equilibrium", "batched_wo_dt_allocation", "sweep_wo_dt_allocation",
+    "equilibrium_eager", "follower_alpha", "leader_f", "leader_v",
+    "oma_allocation", "batched_oma_allocation", "oma_tdma_allocation",
+    "batched_oma_tdma_allocation", "sweep_oma_allocation",
+    "sweep_oma_tdma_allocation", "random_allocation",
+    "batched_random_allocation", "sweep_random_allocation",
+    "wo_dt_allocation", "allocate", "allocate_batched", "sweep_allocation",
 ]

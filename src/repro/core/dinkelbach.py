@@ -30,6 +30,9 @@ Everything except ``return_trace`` mode is trace-safe: ``dinkelbach_power``
 and ``successive_power`` carry fixed-dtype arrays only, so the Stackelberg
 engine can ``vmap`` them across K channel realizations (the batched
 ``lax.while_loop`` keeps converged lanes frozen while the rest iterate).
+``bandwidth`` / ``sigma2`` / ``p_min`` / ``p_max`` / ``d`` are likewise
+plain operands (the sweep engine passes traced ``GamePhysics`` scalars,
+vmapped over a config axis) — only ``inner`` is a static compile key.
 """
 from __future__ import annotations
 

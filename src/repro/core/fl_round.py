@@ -32,8 +32,13 @@ from .aggregation import dt_aggregate, fedavg
 from .digital_twin import dt_feature_noise, split_mapping_mask
 from .roni import roni_filter
 from .stackelberg import (Allocation, GameConfig, batched_equilibrium,
-                          batched_wo_dt_allocation, equilibrium,
-                          oma_allocation, random_allocation, wo_dt_allocation)
+                          batched_oma_allocation, batched_oma_tdma_allocation,
+                          batched_random_allocation, batched_wo_dt_allocation,
+                          equilibrium, oma_allocation, oma_tdma_allocation,
+                          random_allocation, sweep_equilibrium,
+                          sweep_oma_allocation, sweep_oma_tdma_allocation,
+                          sweep_random_allocation, sweep_wo_dt_allocation,
+                          wo_dt_allocation)
 from .channel import sample_round_channels
 
 
@@ -46,7 +51,7 @@ class FLConfig:
     epsilon: float = 0.0            # DT mapping deviation
     roni_threshold: float = 0.02
     weights: Tuple[float, float, float] = rep.PROPOSED_WEIGHTS
-    scheme: str = "proposed"        # proposed | wo_dt | oma | ideal | random
+    scheme: str = "proposed"   # proposed | wo_dt | oma | oma_tdma | ideal | random
     use_roni: bool = True
     samples_per_unit: float = 1.0   # D_n (samples) → data units for latency
 
@@ -103,34 +108,76 @@ def _val_acc(logits_fn, x_val, y_val, params):
 # ---------------------------------------------------------------------------
 def allocate(scheme: str, game_cfg: GameConfig, key, h2_sorted, d_units,
              v_max_sel) -> Allocation:
-    """Per-round resource allocation.  "proposed"/"ideal"/"wo_dt" route
-    through the jitted Stackelberg engine — one compile per GameConfig,
-    no host syncs inside the solve."""
+    """Per-round resource allocation.  Every scheme routes through a fully
+    jitted body whose physics floats are traced operands — one compile per
+    (scheme, shape), shared across GameConfig parameterizations, no host
+    syncs inside the solve."""
     if scheme in ("proposed", "ideal"):
         return equilibrium(game_cfg, h2_sorted, d_units, v_max_sel)
     if scheme == "wo_dt":
         return wo_dt_allocation(game_cfg, h2_sorted, d_units)
     if scheme == "oma":
         return oma_allocation(game_cfg, h2_sorted, d_units, v_max_sel)
+    if scheme == "oma_tdma":
+        return oma_tdma_allocation(game_cfg, h2_sorted, d_units, v_max_sel)
     if scheme == "random":
         return random_allocation(game_cfg, key, h2_sorted, d_units, v_max_sel)
     raise ValueError(scheme)
 
 
 def allocate_batched(scheme: str, game_cfg: GameConfig, h2_batch, d_batch,
-                     v_max_batch, epsilon: float = 0.0) -> Allocation:
+                     v_max_batch, epsilon: float = 0.0,
+                     key=None) -> Allocation:
     """Monte-Carlo allocation: solve K network realizations in one XLA
     call (used by the Fig. 6–9 benchmark sweeps and throughput bench).
-    Only the engine-backed schemes batch; baselines stay per-instance.
+    EVERY scheme batches — proposed/ideal/wo_dt through the Stackelberg
+    engine, OMA-FDMA/OMA-TDMA/random through their vmapped baseline
+    bodies — and the K axis is device-sharded (single-device no-op).
     ``epsilon`` (DT mapping deviation) reaches the engine for the DT
     schemes; "wo_dt" has no twin and ignores it (matching
-    ``wo_dt_allocation``)."""
+    ``wo_dt_allocation``).  ``key`` seeds the "random" scheme's per-draw
+    randomness (defaults to PRNGKey(0))."""
     if scheme in ("proposed", "ideal"):
         return batched_equilibrium(game_cfg, h2_batch, d_batch, v_max_batch,
                                    epsilon=epsilon)
     if scheme == "wo_dt":
         return batched_wo_dt_allocation(game_cfg, h2_batch, d_batch)
+    if scheme == "oma":
+        return batched_oma_allocation(game_cfg, h2_batch, d_batch,
+                                      v_max_batch, epsilon=epsilon)
+    if scheme == "oma_tdma":
+        return batched_oma_tdma_allocation(game_cfg, h2_batch, d_batch,
+                                           v_max_batch, epsilon=epsilon)
+    if scheme == "random":
+        key = jax.random.PRNGKey(0) if key is None else key
+        return batched_random_allocation(game_cfg, key, h2_batch, d_batch,
+                                         v_max_batch, epsilon=epsilon)
     raise ValueError(f"no batched path for scheme {scheme!r}")
+
+
+def sweep_allocation(scheme: str, configs, h2_batch, d_batch, v_max_batch,
+                     epsilon=0.0, key=None) -> Allocation:
+    """Benchmark-grid allocation: C config points × K realizations of one
+    scheme in ONE XLA dispatch of one compiled executable (the fig9 sweep
+    workload).  ``configs`` is a sequence of GameConfig whose physics are
+    stacked into a traced [C] axis; ``epsilon`` may be scalar or [C].
+    Returns an ``Allocation`` with a [C, K] prefix on every field."""
+    if scheme in ("proposed", "ideal"):
+        return sweep_equilibrium(configs, h2_batch, d_batch, v_max_batch,
+                                 epsilon=epsilon)
+    if scheme == "wo_dt":
+        return sweep_wo_dt_allocation(configs, h2_batch, d_batch)
+    if scheme == "oma":
+        return sweep_oma_allocation(configs, h2_batch, d_batch, v_max_batch,
+                                    epsilon=epsilon)
+    if scheme == "oma_tdma":
+        return sweep_oma_tdma_allocation(configs, h2_batch, d_batch,
+                                         v_max_batch, epsilon=epsilon)
+    if scheme == "random":
+        key = jax.random.PRNGKey(0) if key is None else key
+        return sweep_random_allocation(configs, key, h2_batch, d_batch,
+                                       v_max_batch, epsilon=epsilon)
+    raise ValueError(f"no sweep path for scheme {scheme!r}")
 
 
 def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,

@@ -4,6 +4,11 @@ All rate functions take channel power gains ``h2`` sorted in DESCENDING
 order — the paper's SIC decoding order (client 1 decoded first, suffering
 interference from all later-decoded clients; client N decoded last,
 interference-free; Eq. 9).
+
+``bandwidth`` / ``sigma2`` accept plain floats OR traced JAX scalars: the
+sweep engine feeds them as ``GamePhysics`` operands (possibly vmapped over
+a config axis), so nothing here may branch on their values or treat them
+as static.
 """
 from __future__ import annotations
 
@@ -18,8 +23,7 @@ def sic_order(h2):
     return jnp.argsort(-h2)
 
 
-def noma_rates(p, h2_sorted, bandwidth: float = BANDWIDTH_HZ,
-               sigma2: float | None = None):
+def noma_rates(p, h2_sorted, bandwidth=BANDWIDTH_HZ, sigma2=None):
     """Achievable rates (bit/s) under SIC, Eq. (9).
 
     p, h2_sorted: [N] aligned with the descending-gain decode order.
@@ -34,16 +38,14 @@ def noma_rates(p, h2_sorted, bandwidth: float = BANDWIDTH_HZ,
     return bandwidth * jnp.log2(1.0 + sinr)
 
 
-def sum_capacity(p, h2, bandwidth: float = BANDWIDTH_HZ,
-                 sigma2: float | None = None):
+def sum_capacity(p, h2, bandwidth=BANDWIDTH_HZ, sigma2=None):
     """MAC sum capacity B·log2(1 + Σ p|h|²/σ²) — SIC achieves it exactly."""
     if sigma2 is None:
         sigma2 = noise_power(bandwidth)
     return bandwidth * jnp.log2(1.0 + jnp.sum(p * h2) / sigma2)
 
 
-def oma_rates(p, h2, bandwidth: float = BANDWIDTH_HZ,
-              sigma2_full: float | None = None):
+def oma_rates(p, h2, bandwidth=BANDWIDTH_HZ, sigma2_full=None):
     """Orthogonal baseline: equal bandwidth split B/N, no interference."""
     n = h2.shape[0]
     bw = bandwidth / n

@@ -12,47 +12,72 @@ Closed-form structure used by ``equilibrium`` (Algorithm 2):
       f_n* = max(f̃_n, f_min),  f̃_n = (1−v_n)·c_n·D_n / A_n        (§V-B-2)
       p_n* via successive Dinkelbach                               (§V-B-3)
 
-Engine layout (one XLA program per solve):
+Engine layout — ONE compiled program per (scheme, shape), shared by every
+parameterization:
 
-  * ``equilibrium``         — single instance, fully jitted: the Alg.-2
-    alternation runs as a ``lax.while_loop`` whose carry holds the
-    best-iterate safeguard (lexicographic (infeasible, energy) key) and
-    the convergence flag as JAX arrays — no host syncs on the hot path.
-  * ``batched_equilibrium`` — ``vmap`` of the same body over K independent
-    network realizations ``h2_batch[K, N]``; one XLA call solves all K
-    (the Monte-Carlo workload of Figs. 4–9 and related incentive-game
-    reproductions).
-  * ``equilibrium_eager``   — the legacy host-side Python loop with
-    per-iteration ``float()``/``bool()`` syncs, kept as the numerical
-    reference for tests and the throughput microbench.
+  * ``GameConfig``   — the user-facing Table-I record (plain floats,
+    hashable).  Only ``dinkelbach_inner`` is a static jit argument; all
+    physics floats are lowered to a ``GamePhysics`` pytree of traced
+    array operands via ``GameConfig.physics()``, so sweeping bandwidth /
+    t_max / model_bits / … re-uses the same XLA executable instead of
+    recompiling per point.
+  * ``equilibrium``         — single instance, fully jitted ``lax.while_loop``
+    Alg.-2 alternation with the best-iterate safeguard carried as arrays.
+  * ``batched_equilibrium`` — ``vmap`` over K independent realizations
+    ``h2_batch[K, N]``; the K axis is sharded across available devices
+    (single-device fallback is a no-op).
+  * ``sweep_equilibrium``   — ``vmap`` over a leading config axis ON TOP of
+    the K axis: the whole benchmark grid (C config points × K channel
+    draws) is one dispatch of one executable.  ``epsilon`` may also vary
+    along the config axis (fig6's deviation sweep).
+  * OMA-FDMA / OMA-TDMA / random baselines get the same three tiers
+    (``oma_allocation`` / ``batched_oma_allocation`` / ``sweep_oma_allocation``
+    etc.), so ``fl_round.allocate_batched`` works for every scheme.
+  * ``equilibrium_eager``   — the legacy host-side Python loop, kept as the
+    numerical reference for tests and the throughput microbench.
+
+``TRACE_COUNTS`` counts actual traces of each jitted entry point (the
+Python body only runs when XLA compiles a new specialization), which is
+how the recompile-count tests and the benchmark's ``recompiles`` field
+prove the zero-mid-sweep-recompile property.
 
 ``Allocation`` is registered as a pytree so whole solves can cross
 ``jit``/``vmap`` boundaries; under ``batched_equilibrium`` every field
-gains a leading K axis.
+gains a leading K axis, under ``sweep_equilibrium`` a [C, K] prefix.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from dataclasses import dataclass, field
-from functools import partial
-from typing import Tuple
+from functools import lru_cache, partial
+from typing import Sequence, Tuple
+
+import numpy as np
 
 import jax
 import jax.numpy as jnp
 
 from . import noma
 from .channel import BANDWIDTH_HZ, noise_power
-from .dinkelbach import successive_power
+from .dinkelbach import dinkelbach_power, successive_power
 
 TAU = 2e-28  # effective capacitance coefficient (Table I / [22])
+
+# traces of each jitted entry point — a proxy for XLA compiles (the Python
+# body executes once per new specialization).  Keyed by entry-point name.
+TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
 @dataclass(frozen=True)
 class GameConfig:
-    """Table I simulation parameters.
+    """Table I simulation parameters (plain floats, hashable).
 
-    Frozen + hashable: passed as a static argument to the jitted solvers,
-    so each distinct parameterization compiles exactly once.
+    The physics fields are NOT static jit arguments: the solvers receive
+    them as a traced ``GamePhysics`` pytree (see ``physics()``), so any
+    number of distinct parameterizations share one compiled engine.  Only
+    ``dinkelbach_inner`` (an algorithm choice, not an operand) stays
+    static.
     """
     bandwidth: float = BANDWIDTH_HZ
     sigma2: float = field(default_factory=noise_power)
@@ -67,6 +92,86 @@ class GameConfig:
     tau: float = TAU
     dinkelbach_inner: str = "projected"
 
+    def physics(self, dtype=jnp.float32) -> "GamePhysics":
+        """Traced-operand view of the physics fields (scalar leaves)."""
+        return GamePhysics(**{name: jnp.asarray(getattr(self, name), dtype)
+                              for name in _PHYSICS_FIELDS})
+
+
+@dataclass(frozen=True)
+class GamePhysics:
+    """The traced remainder of ``GameConfig``: every field is a JAX array
+    operand (scalar per instance; [C] under a config-axis ``vmap``).
+
+    Registered as a pytree so it flows through jit/vmap; attribute names
+    mirror ``GameConfig`` so the solver bodies are polymorphic over both
+    (the eager reference path passes a ``GameConfig`` directly).
+    """
+    bandwidth: jax.Array
+    sigma2: jax.Array
+    p_min: jax.Array
+    p_max: jax.Array
+    f_min: jax.Array
+    f_max: jax.Array
+    f_server: jax.Array
+    t_max: jax.Array
+    cycles_per_sample: jax.Array
+    model_bits: jax.Array
+    tau: jax.Array
+
+
+_PHYSICS_FIELDS = tuple(f.name for f in dataclasses.fields(GamePhysics))
+jax.tree_util.register_dataclass(GamePhysics, data_fields=_PHYSICS_FIELDS,
+                                 meta_fields=())
+
+
+def stack_physics(configs: Sequence[GameConfig],
+                  dtype=jnp.float32) -> GamePhysics:
+    """Stack C configs into a GamePhysics with [C]-shaped leaves — the
+    leading config axis of ``sweep_equilibrium``.  All configs must agree
+    on the static ``dinkelbach_inner``."""
+    inners = {c.dinkelbach_inner for c in configs}
+    if len(inners) != 1:
+        raise ValueError(f"sweep configs mix dinkelbach_inner={inners}; "
+                         "the inner solver is static — sweep each separately")
+    return GamePhysics(**{name: jnp.asarray([getattr(c, name)
+                                             for c in configs], dtype)
+                          for name in _PHYSICS_FIELDS})
+
+
+# ---------------------------------------------------------------------------
+# device sharding of the Monte-Carlo axis
+# ---------------------------------------------------------------------------
+def sharding_layout(k: int) -> int:
+    """Number of devices the K axis is split across: the largest divisor of
+    K within the available device count (1 ⇒ single-device fallback)."""
+    n_dev = len(jax.devices())
+    if n_dev <= 1 or k <= 0:
+        return 1
+    return max(d for d in range(1, n_dev + 1) if k % d == 0)
+
+
+@lru_cache(maxsize=64)
+def _axis_sharding(n_dev: int, axis: int):
+    """Cached NamedSharding splitting axis ``axis`` over ``n_dev`` devices
+    (mesh construction is not free and batched dispatches are hot)."""
+    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:n_dev]), ("k",))
+    spec = jax.sharding.PartitionSpec(*([None] * axis), "k")
+    return jax.sharding.NamedSharding(mesh, spec)
+
+
+def _shard_axis(arrays: tuple, axis: int, size: int) -> tuple:
+    """device_put each array with the size-``size`` axis ``axis`` sharded
+    across devices (NamedSharding); jit then partitions the vmapped solve
+    via GSPMD.  No-op on a single device or when K has no useful divisor."""
+    n_dev = sharding_layout(size)
+    if n_dev <= 1:
+        return arrays
+    ns = _axis_sharding(n_dev, axis)
+    return tuple(jax.device_put(a, ns)
+                 if a.ndim > axis and a.shape[axis] == size else a
+                 for a in arrays)
+
 
 # ---------------------------------------------------------------------------
 # per-term physics (paper Eqs. 5–7, 10–11)
@@ -75,7 +180,7 @@ def local_compute_latency(c, v, D, f):
     return c * (1.0 - v) * D / f                                    # Eq. (5)
 
 
-def local_compute_energy(c, v, D, f, tau: float = TAU):
+def local_compute_energy(c, v, D, f, tau=TAU):
     return 0.5 * tau * c * (1.0 - v) * D * f ** 2                   # Eq. (6)
 
 
@@ -140,7 +245,9 @@ jax.tree_util.register_dataclass(Allocation, data_fields=_ALLOC_FIELDS,
                                  meta_fields=())
 
 
-def round_metrics(cfg: GameConfig, D, v, f, p, h2_sorted):
+def round_metrics(cfg, D, v, f, p, h2_sorted):
+    """Per-client latency/energy terms.  ``cfg`` may be a ``GameConfig``
+    (floats — eager paths, tests) or a ``GamePhysics`` (traced)."""
     rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
     t_com = noma.tx_latency(cfg.model_bits, rates)
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
@@ -149,18 +256,18 @@ def round_metrics(cfg: GameConfig, D, v, f, p, h2_sorted):
     return rates, t_cmp, t_com, e_cmp, e_com
 
 
-def _leader_iteration(cfg: GameConfig, h2_sorted, D, v, f):
+def _leader_iteration(cfg, h2_sorted, D, v, f, inner: str):
     """One Alg.-2 leader sweep: p via successive Dinkelbach given the current
     compute times, then f runs to the deadline given the new airtimes.
 
     Shared verbatim by the eager reference loop and the traced engine so the
-    two paths are numerically identical per iteration.
-    """
+    two paths are numerically identical per iteration.  ``inner`` is the
+    static Dinkelbach inner-solver choice (the non-physics remainder of
+    GameConfig)."""
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
     g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
     p, q = successive_power(h2_sorted, cfg.model_bits, g_n, cfg.bandwidth,
-                            cfg.sigma2, cfg.p_min, cfg.p_max,
-                            inner=cfg.dinkelbach_inner)
+                            cfg.sigma2, cfg.p_min, cfg.p_max, inner=inner)
     rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
     t_com = noma.tx_latency(cfg.model_bits, rates)
     a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
@@ -171,7 +278,7 @@ def _leader_iteration(cfg: GameConfig, h2_sorted, D, v, f):
     return f, p, q, e_total, feasible
 
 
-def _finish(cfg: GameConfig, h2_sorted, D, v, f, p, q, d_hat, iterations,
+def _finish(cfg, h2_sorted, D, v, f, p, q, d_hat, iterations,
             feasible) -> Allocation:
     """Follower best response to the leader's final strategy (Eq. 17)."""
     rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
@@ -189,8 +296,8 @@ def _finish(cfg: GameConfig, h2_sorted, D, v, f, p, q, d_hat, iterations,
                       feasible=feasible)
 
 
-def _solve(cfg: GameConfig, h2_sorted, D, v_max, epsilon, max_iter: int,
-           tol) -> Allocation:
+def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
+           inner: str = "projected") -> Allocation:
     """Traced Alg.-2 alternation: a ``lax.while_loop`` whose carry holds the
     best-iterate safeguard and the convergence flag as arrays.
 
@@ -215,7 +322,7 @@ def _solve(cfg: GameConfig, h2_sorted, D, v_max, epsilon, max_iter: int,
 
     def body(carry):
         f, p, q, prev_e, bb, be, bf, bp, bq, it, _done = carry
-        f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f)
+        f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f, inner)
         bad = jnp.where(feas, jnp.asarray(0.0, dtype),
                         jnp.asarray(1.0, dtype))
         # strict lexicographic improvement, matching the legacy tuple compare
@@ -236,30 +343,116 @@ def _solve(cfg: GameConfig, h2_sorted, D, v_max, epsilon, max_iter: int,
     return _finish(cfg, h2_sorted, D, v, bf, bp, bq, d_hat, it, bb == 0.0)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_iter"))
-def _equilibrium_jit(cfg, h2_sorted, D, v_max, epsilon, tol, max_iter):
-    return _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter, tol)
+@partial(jax.jit, static_argnames=("max_iter", "inner"))
+def _equilibrium_jit(phys, h2_sorted, D, v_max, epsilon, tol, max_iter,
+                     inner):
+    TRACE_COUNTS["equilibrium"] += 1
+    return _solve(phys, h2_sorted, D, v_max, epsilon, max_iter, tol, inner)
 
 
-@partial(jax.jit, static_argnames=("cfg", "max_iter"))
-def _batched_equilibrium_jit(cfg, h2_batch, D_batch, v_max_batch, epsilon,
-                             tol, max_iter):
-    solve1 = lambda h2, d, vm: _solve(cfg, h2, d, vm, epsilon, max_iter, tol)
+@partial(jax.jit, static_argnames=("max_iter", "inner"))
+def _batched_equilibrium_jit(phys, h2_batch, D_batch, v_max_batch, epsilon,
+                             tol, max_iter, inner):
+    TRACE_COUNTS["batched_equilibrium"] += 1
+    solve1 = lambda h2, d, vm: _solve(phys, h2, d, vm, epsilon, max_iter,
+                                      tol, inner)
     return jax.vmap(solve1)(h2_batch, D_batch, v_max_batch)
+
+
+@partial(jax.jit, static_argnames=("max_iter", "inner"))
+def _sweep_equilibrium_jit(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c, tol,
+                           max_iter, inner):
+    TRACE_COUNTS["sweep_equilibrium"] += 1
+
+    def solve_config(ph, h2_kn, d_kn, vm_kn, eps):
+        solve1 = lambda h2, d, vm: _solve(ph, h2, d, vm, eps, max_iter,
+                                          tol, inner)
+        return jax.vmap(solve1)(h2_kn, d_kn, vm_kn)
+
+    return jax.vmap(solve_config)(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c)
+
+
+@lru_cache(maxsize=512)
+def _physics_cached(cfg: GameConfig, dtype) -> GamePhysics:
+    """Per-(config, dtype) device scalars, built once — keeps the
+    per-dispatch host overhead of the traced-physics design off the
+    per-instance hot path (GameConfig is frozen + hashable)."""
+    return cfg.physics(dtype)
+
+
+@lru_cache(maxsize=4096)
+def _scalar_cached(value: float, dtype):
+    return jnp.asarray(value, dtype)
+
+
+def _as_operand(x, dtype):
+    """Scalar operand with a cached device buffer for python numbers."""
+    if isinstance(x, (int, float)):
+        return _scalar_cached(float(x), dtype)
+    return jnp.asarray(x, dtype)
+
+
+def _canon_single(cfg: GameConfig, h2_sorted, D, v_max, epsilon, tol):
+    """Normalize one instance's operands to a fixed-dtype signature so
+    repeated calls (floats vs arrays, different configs) hit one jit cache
+    entry."""
+    h2_sorted = jnp.asarray(h2_sorted)
+    dtype = jnp.result_type(h2_sorted)
+    return (_physics_cached(cfg, dtype), h2_sorted,
+            jnp.asarray(D, dtype), jnp.asarray(v_max, dtype),
+            _as_operand(epsilon, dtype), _as_operand(tol, dtype))
+
+
+def _canon_batch(cfg: GameConfig, h2_batch, D_batch, v_max_batch, epsilon,
+                 tol, shard: bool = True):
+    h2_batch = jnp.asarray(h2_batch)
+    dtype = jnp.result_type(h2_batch)
+    k, n = h2_batch.shape
+    D_batch = jnp.broadcast_to(jnp.asarray(D_batch, dtype), (k, n))
+    v_max_batch = jnp.broadcast_to(jnp.asarray(v_max_batch, dtype), (k, n))
+    if shard:
+        h2_batch, D_batch, v_max_batch = _shard_axis(
+            (h2_batch, D_batch, v_max_batch), axis=0, size=k)
+    return (_physics_cached(cfg, dtype), h2_batch, D_batch, v_max_batch,
+            _as_operand(epsilon, dtype), _as_operand(tol, dtype))
+
+
+def _canon_sweep(configs: Sequence[GameConfig], h2_batch, D, v_max, epsilon,
+                 tol, shard: bool = True):
+    """[C]-stack the configs and broadcast operands to [C, K, N]; epsilon
+    may be scalar or [C] (it rides the config axis — fig6's ε sweep)."""
+    configs = list(configs)
+    c = len(configs)
+    h2_batch = jnp.asarray(h2_batch)
+    dtype = jnp.result_type(h2_batch)
+    if h2_batch.ndim == 2:
+        h2_batch = jnp.broadcast_to(h2_batch, (c,) + h2_batch.shape)
+    _, k, n = h2_batch.shape
+    D = jnp.broadcast_to(jnp.asarray(D, dtype), (c, k, n))
+    v_max = jnp.broadcast_to(jnp.asarray(v_max, dtype), (c, k, n))
+    eps = jnp.broadcast_to(jnp.asarray(epsilon, dtype), (c,))
+    if shard:
+        h2_batch, D, v_max = _shard_axis((h2_batch, D, v_max), axis=1, size=k)
+    return (stack_physics(configs, dtype), h2_batch, D, v_max, eps,
+            jnp.asarray(tol, dtype), configs[0].dinkelbach_inner)
 
 
 def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
                 max_iter: int = 20, tol: float = 1e-6) -> Allocation:
     """Algorithm 2 — alternate leader/follower best responses to the
-    Stackelberg equilibrium, compiled to a single XLA program.
-    Inputs sorted by descending channel gain.
+    Stackelberg equilibrium, compiled to a single XLA program shared by
+    every physics parameterization (only ``dinkelbach_inner`` and the
+    shapes specialize the compile).  Inputs sorted by descending channel
+    gain.
 
     h2_sorted : [N] channel power gains (SIC order)
     D         : [N] client data sizes (samples)
     v_max     : [N] max insensitive-data fractions
     """
-    return _equilibrium_jit(cfg, h2_sorted, D, v_max, epsilon, tol,
-                            max_iter=max_iter)
+    phys, h2, D, v_max, eps, tol = _canon_single(cfg, h2_sorted, D, v_max,
+                                                 epsilon, tol)
+    return _equilibrium_jit(phys, h2, D, v_max, eps, tol, max_iter=max_iter,
+                            inner=cfg.dinkelbach_inner)
 
 
 def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
@@ -274,14 +467,36 @@ def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
     Returns an ``Allocation`` whose every field carries a leading K axis
     (scalars such as ``energy`` become [K]).  This is the Monte-Carlo
     entry point: thousands of channel draws per benchmark point amortize
-    to one compile + one device dispatch.
+    to one compile + one device dispatch, and the K axis is sharded
+    across available devices (no-op on one device).
     """
-    h2_batch = jnp.asarray(h2_batch)
-    k, n = h2_batch.shape
-    D_batch = jnp.broadcast_to(D_batch, (k, n))
-    v_max_batch = jnp.broadcast_to(v_max_batch, (k, n))
-    return _batched_equilibrium_jit(cfg, h2_batch, D_batch, v_max_batch,
-                                    epsilon, tol, max_iter=max_iter)
+    phys, h2, D, vm, eps, tol = _canon_batch(cfg, h2_batch, D_batch,
+                                             v_max_batch, epsilon, tol)
+    return _batched_equilibrium_jit(phys, h2, D, vm, eps, tol,
+                                    max_iter=max_iter,
+                                    inner=cfg.dinkelbach_inner)
+
+
+def sweep_equilibrium(configs: Sequence[GameConfig], h2_batch, D, v_max,
+                      epsilon=0.0, max_iter: int = 20,
+                      tol: float = 1e-6) -> Allocation:
+    """Solve a whole benchmark grid — C config points × K channel draws —
+    in ONE XLA call of ONE executable (zero mid-sweep recompiles).
+
+    configs  : C ``GameConfig`` points (same ``dinkelbach_inner``); their
+               physics floats are stacked into a [C]-leaved ``GamePhysics``
+               and vmapped over, so distinct t_max / model_bits / bandwidth
+               values are array rows, not compile keys.
+    h2_batch : [K, N] (shared across configs) or [C, K, N]
+    D, v_max : broadcastable to [C, K, N]
+    epsilon  : scalar, or [C] to sweep the DT deviation along the config axis
+
+    Returns an ``Allocation`` with a [C, K] leading prefix on every field.
+    """
+    phys, h2, D, vm, eps, tol, inner = _canon_sweep(configs, h2_batch, D,
+                                                    v_max, epsilon, tol)
+    return _sweep_equilibrium_jit(phys, h2, D, vm, eps, tol,
+                                  max_iter=max_iter, inner=inner)
 
 
 def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
@@ -292,18 +507,21 @@ def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
     for the jitted engine (tests) and as the baseline of
     ``benchmarks/equilibrium_throughput.py``.  Not jit/vmap-able.
     """
+    h2_sorted = jnp.asarray(h2_sorted)
     n = h2_sorted.shape[0]
-    v = leader_v(jnp.broadcast_to(v_max, (n,)))
-    f = jnp.full((n,), cfg.f_max)
-    p = jnp.full((n,), cfg.p_max)
-    q = jnp.zeros((n,))
-    d_hat = v * D + epsilon                       # DT-mapped data size
+    dtype = jnp.result_type(h2_sorted)
+    v = leader_v(jnp.broadcast_to(v_max, (n,)).astype(dtype))
+    f = jnp.full((n,), cfg.f_max, dtype)
+    p = jnp.full((n,), cfg.p_max, dtype)
+    q = jnp.zeros((n,), dtype)
+    d_hat = v * jnp.asarray(D, dtype) + epsilon   # DT-mapped data size
 
     prev_e = jnp.inf
     it = 0
     best = None   # best-iterate safeguard (see _solve)
     for it in range(1, max_iter + 1):
-        f, p, q, e_total, feas = _leader_iteration(cfg, h2_sorted, D, v, f)
+        f, p, q, e_total, feas = _leader_iteration(cfg, h2_sorted, D, v, f,
+                                                   cfg.dinkelbach_inner)
         cand = (not bool(feas), float(e_total), (f, p, q))
         if best is None or cand[:2] < best[:2]:
             best = cand
@@ -316,26 +534,177 @@ def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
 
 
 # ---------------------------------------------------------------------------
-# baselines for Fig. 9
+# baselines for Fig. 9 — same three-tier layout (single / batched / sweep)
 # ---------------------------------------------------------------------------
+def _random_body(cfg, key, h2_sorted, D, v_max, epsilon) -> Allocation:
+    """Random resource allocation baseline (same selection, random p/f/v).
+    Traced body shared by the single/batched/sweep entry points."""
+    n = h2_sorted.shape[0]
+    dtype = jnp.result_type(h2_sorted)
+    k1, k2, k3 = jax.random.split(key, 3)
+    v = jax.random.uniform(k1, (n,), dtype) * jnp.broadcast_to(
+        v_max, (n,)).astype(dtype)
+    f = cfg.f_min + jax.random.uniform(k2, (n,), dtype) * (cfg.f_max -
+                                                           cfg.f_min)
+    p = cfg.p_min + jax.random.uniform(k3, (n,), dtype) * (cfg.p_max -
+                                                           cfg.p_min)
+    D = jnp.broadcast_to(D, (n,)).astype(dtype)
+    d_hat = v * D + epsilon
+    rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
+                                                      h2_sorted)
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
+                              cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha,
+                              cfg.f_server)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates,
+                      q=jnp.zeros((n,), dtype), t_cmp=t_cmp, t_com=t_com,
+                      t_dt=t_dt, t_total=jnp.maximum(t_total, jnp.max(t_dt)),
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
+                      iterations=jnp.asarray(0, jnp.int32),
+                      feasible=t_total <= cfg.t_max + 1e-6)
+
+
+def _oma_body(cfg, h2_sorted, D, v_max, epsilon, inner: str,
+              tdma: bool) -> Allocation:
+    """OMA baseline body — FDMA (B/N sub-bands) or TDMA (sequential
+    full-band slots), fully traced: the per-client Dinkelbach solves are a
+    client-axis ``vmap`` instead of a host loop, so the whole baseline
+    jits/vmaps like the proposed engine."""
+    n = h2_sorted.shape[0]
+    dtype = jnp.result_type(h2_sorted)
+    v = leader_v(jnp.broadcast_to(v_max, (n,)).astype(dtype))
+    D = jnp.broadcast_to(D, (n,)).astype(dtype)
+    f = jnp.full((n,), cfg.f_max, dtype)
+    d_hat = v * D + epsilon
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    if tdma:
+        # per-client slot budget: (Tmax − t_cmp)/N, full band per slot
+        g_n = jnp.maximum((cfg.t_max - t_cmp) / n, 1e-3)
+        bw, s2 = cfg.bandwidth, cfg.sigma2
+    else:
+        g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)
+        bw, s2 = cfg.bandwidth / n, cfg.sigma2 / n
+
+    def solve(h2_n, g_nn):
+        p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn, h2_n / s2, bw,
+                                       cfg.p_min, cfg.p_max, inner=inner)
+        return p_n, q_n
+
+    p, q = jax.vmap(solve)(h2_sorted, g_n)
+    if tdma:
+        rates = cfg.bandwidth * jnp.log2(1.0 + p * h2_sorted / cfg.sigma2)
+        t_own = noma.tx_latency(cfg.model_bits, rates)  # own-slot airtime
+        t_com = jnp.sum(t_own) * jnp.ones_like(t_own)   # sequential round
+    else:
+        rates = noma.oma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+        t_own = t_com = noma.tx_latency(cfg.model_bits, rates)
+    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
+    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
+    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
+    e_com = noma.tx_energy(p, t_own)                    # energy over own slot
+    t_total = jnp.max(t_cmp + t_com)
+    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
+                              cfg.f_server)
+    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha,
+                              cfg.f_server)
+    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
+                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
+                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
+                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
+                      iterations=jnp.asarray(0, jnp.int32),
+                      feasible=t_total <= cfg.t_max + 1e-6)
+
+
+@partial(jax.jit, static_argnames=("inner",))
+def _random_jit(phys, key, h2, D, v_max, epsilon, inner):
+    del inner  # random draws never run Dinkelbach; kept for signature parity
+    TRACE_COUNTS["random_allocation"] += 1
+    return _random_body(phys, key, h2, D, v_max, epsilon)
+
+
+@partial(jax.jit, static_argnames=("inner",))
+def _batched_random_jit(phys, keys, h2, D, v_max, epsilon, inner):
+    del inner
+    TRACE_COUNTS["batched_random_allocation"] += 1
+    body = lambda kk, h, d, vm: _random_body(phys, kk, h, d, vm, epsilon)
+    return jax.vmap(body)(keys, h2, D, v_max)
+
+
+@partial(jax.jit, static_argnames=("inner",))
+def _sweep_random_jit(phys, keys, h2, D, v_max, epsilon_c, inner):
+    del inner
+    TRACE_COUNTS["sweep_random_allocation"] += 1
+
+    def per_config(ph, h_kn, d_kn, vm_kn, eps):
+        body = lambda kk, h, d, vm: _random_body(ph, kk, h, d, vm, eps)
+        return jax.vmap(body)(keys, h_kn, d_kn, vm_kn)
+
+    # keys are shared across the config axis (in_axes=None): every config
+    # point sees the same K channel/key draws, isolating the config effect
+    return jax.vmap(per_config)(phys, h2, D, v_max, epsilon_c)
+
+
+def _oma_variant(tdma: bool) -> str:
+    """TRACE_COUNTS key suffix: FDMA and TDMA are distinct static
+    specializations, so they must not share a recompile counter."""
+    return "oma_tdma_allocation" if tdma else "oma_allocation"
+
+
+@partial(jax.jit, static_argnames=("inner", "tdma"))
+def _oma_jit(phys, h2, D, v_max, epsilon, inner, tdma):
+    TRACE_COUNTS[_oma_variant(tdma)] += 1
+    return _oma_body(phys, h2, D, v_max, epsilon, inner, tdma)
+
+
+@partial(jax.jit, static_argnames=("inner", "tdma"))
+def _batched_oma_jit(phys, h2, D, v_max, epsilon, inner, tdma):
+    TRACE_COUNTS["batched_" + _oma_variant(tdma)] += 1
+    body = lambda h, d, vm: _oma_body(phys, h, d, vm, epsilon, inner, tdma)
+    return jax.vmap(body)(h2, D, v_max)
+
+
+@partial(jax.jit, static_argnames=("inner", "tdma"))
+def _sweep_oma_jit(phys, h2, D, v_max, epsilon_c, inner, tdma):
+    TRACE_COUNTS["sweep_" + _oma_variant(tdma)] += 1
+
+    def per_config(ph, h_kn, d_kn, vm_kn, eps):
+        body = lambda h, d, vm: _oma_body(ph, h, d, vm, eps, inner, tdma)
+        return jax.vmap(body)(h_kn, d_kn, vm_kn)
+
+    return jax.vmap(per_config)(phys, h2, D, v_max, epsilon_c)
+
+
 def random_allocation(cfg: GameConfig, key, h2_sorted, D, v_max,
                       epsilon: float = 0.0) -> Allocation:
     """Random resource allocation baseline (same selection, random p/f/v)."""
-    n = h2_sorted.shape[0]
-    k1, k2, k3 = jax.random.split(key, 3)
-    v = jax.random.uniform(k1, (n,)) * v_max
-    f = cfg.f_min + jax.random.uniform(k2, (n,)) * (cfg.f_max - cfg.f_min)
-    p = cfg.p_min + jax.random.uniform(k3, (n,)) * (cfg.p_max - cfg.p_min)
-    d_hat = v * D + epsilon
-    rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p, h2_sorted)
-    t_total = jnp.max(t_cmp + t_com)
-    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
-    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
-    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates,
-                      q=jnp.zeros((n,)), t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
-                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
-                      feasible=t_total <= cfg.t_max + 1e-6)
+    phys, h2, D, vm, eps, _ = _canon_single(cfg, h2_sorted, D, v_max,
+                                            epsilon, 0.0)
+    return _random_jit(phys, key, h2, D, vm, eps, inner=cfg.dinkelbach_inner)
+
+
+def batched_random_allocation(cfg: GameConfig, key, h2_batch, D_batch,
+                              v_max_batch, epsilon: float = 0.0) -> Allocation:
+    """K random allocations in one XLA call; per-draw keys are
+    ``jax.random.split(key, K)``, so row i reproduces
+    ``random_allocation(cfg, jax.random.split(key, K)[i], …)`` exactly."""
+    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
+                                           v_max_batch, epsilon, 0.0)
+    keys = jax.random.split(key, h2.shape[0])
+    return _batched_random_jit(phys, keys, h2, D, vm, eps,
+                               inner=cfg.dinkelbach_inner)
+
+
+def sweep_random_allocation(configs: Sequence[GameConfig], key, h2_batch, D,
+                            v_max, epsilon=0.0) -> Allocation:
+    """C configs × K draws of the random baseline in one call.  The K
+    per-draw keys are shared across the config axis (each config point sees
+    identical randomness, isolating the config effect)."""
+    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
+                                                  v_max, epsilon, 0.0)
+    keys = jax.random.split(key, h2.shape[1])
+    return _sweep_random_jit(phys, keys, h2, D, vm, eps, inner=inner)
 
 
 def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
@@ -346,72 +715,55 @@ def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
     sub-bands force long transmissions / higher power, reproducing the
     Fig. 9 OMA penalty.  (At very light load OMA is within ~2% of NOMA —
     regime note in EXPERIMENTS.md §Paper-validation.)"""
-    n = h2_sorted.shape[0]
-    v = leader_v(jnp.broadcast_to(v_max, (n,)))
-    f = jnp.full((n,), cfg.f_max)
-    d_hat = v * D + epsilon
-    bw, s2 = cfg.bandwidth / n, cfg.sigma2 / n
-    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
-    g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)
-    from .dinkelbach import dinkelbach_power
-    def solve(h2_n, g_nn):
-        p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn, h2_n / s2, bw,
-                                       cfg.p_min, cfg.p_max,
-                                       inner=cfg.dinkelbach_inner)
-        return p_n, q_n
-    p, q = jax.vmap(solve)(h2_sorted, g_n)
-    rates = noma.oma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
-    t_com = noma.tx_latency(cfg.model_bits, rates)
-    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
-    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
-    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
-    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
-    e_com = noma.tx_energy(p, t_com)
-    t_total = jnp.max(t_cmp + t_com)
-    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
-    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
-    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
-                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
-                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
-                      feasible=t_total <= cfg.t_max + 1e-6)
+    phys, h2, D, vm, eps, _ = _canon_single(cfg, h2_sorted, D, v_max,
+                                            epsilon, 0.0)
+    return _oma_jit(phys, h2, D, vm, eps, inner=cfg.dinkelbach_inner,
+                    tdma=False)
+
+
+def batched_oma_allocation(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
+                           epsilon: float = 0.0) -> Allocation:
+    """K OMA-FDMA allocations in one XLA call (K axis device-sharded)."""
+    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
+                                           v_max_batch, epsilon, 0.0)
+    return _batched_oma_jit(phys, h2, D, vm, eps,
+                            inner=cfg.dinkelbach_inner, tdma=False)
+
+
+def sweep_oma_allocation(configs: Sequence[GameConfig], h2_batch, D, v_max,
+                         epsilon=0.0) -> Allocation:
+    """C configs × K draws of the OMA-FDMA baseline in one call."""
+    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
+                                                  v_max, epsilon, 0.0)
+    return _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=False)
 
 
 def oma_tdma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
                         epsilon: float = 0.0) -> Allocation:
     """OMA variant: TDMA — sequential full-band slots (round latency Σ t_n,
     the paper's "insufficient clients per round" mechanism)."""
-    n = h2_sorted.shape[0]
-    v = leader_v(jnp.broadcast_to(v_max, (n,)))
-    f = jnp.full((n,), cfg.f_max)
-    d_hat = v * D + epsilon
-    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
-    # per-client slot budget: (Tmax − t_cmp)/N
-    g_n = jnp.maximum((cfg.t_max - t_cmp) / n, 1e-3)
-    from .dinkelbach import dinkelbach_power
-    def solve(h2_n, g_nn):
-        p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn,
-                                       h2_n / cfg.sigma2, cfg.bandwidth,
-                                       cfg.p_min, cfg.p_max,
-                                       inner=cfg.dinkelbach_inner)
-        return p_n, q_n
-    p, q = jax.vmap(solve)(h2_sorted, g_n)
-    rates = cfg.bandwidth * jnp.log2(1.0 + p * h2_sorted / cfg.sigma2)
-    t_own = noma.tx_latency(cfg.model_bits, rates)     # own-slot airtime
-    t_com = jnp.sum(t_own) * jnp.ones_like(t_own)      # sequential round time
-    a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
-    f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
-    t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
-    e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
-    e_com = noma.tx_energy(p, t_own)                   # energy over own slot
-    t_total = jnp.max(t_cmp + t_com)
-    alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total, cfg.f_server)
-    t_dt = dt_compute_latency(cfg.cycles_per_sample, d_hat, alpha, cfg.f_server)
-    return Allocation(v=v, f=f, p=p, alpha=alpha, rates=rates, q=q,
-                      t_cmp=t_cmp, t_com=t_com, t_dt=t_dt,
-                      t_total=jnp.maximum(t_total, jnp.max(t_dt)),
-                      energy=jnp.sum(e_cmp + e_com), e_cmp=e_cmp, e_com=e_com,
-                      feasible=t_total <= cfg.t_max + 1e-6)
+    phys, h2, D, vm, eps, _ = _canon_single(cfg, h2_sorted, D, v_max,
+                                            epsilon, 0.0)
+    return _oma_jit(phys, h2, D, vm, eps, inner=cfg.dinkelbach_inner,
+                    tdma=True)
+
+
+def batched_oma_tdma_allocation(cfg: GameConfig, h2_batch, D_batch,
+                                v_max_batch,
+                                epsilon: float = 0.0) -> Allocation:
+    """K OMA-TDMA allocations in one XLA call (K axis device-sharded)."""
+    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
+                                           v_max_batch, epsilon, 0.0)
+    return _batched_oma_jit(phys, h2, D, vm, eps,
+                            inner=cfg.dinkelbach_inner, tdma=True)
+
+
+def sweep_oma_tdma_allocation(configs: Sequence[GameConfig], h2_batch, D,
+                              v_max, epsilon=0.0) -> Allocation:
+    """C configs × K draws of the OMA-TDMA baseline in one call."""
+    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
+                                                  v_max, epsilon, 0.0)
+    return _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=True)
 
 
 def wo_dt_allocation(cfg: GameConfig, h2_sorted, D) -> Allocation:
@@ -419,8 +771,8 @@ def wo_dt_allocation(cfg: GameConfig, h2_sorted, D) -> Allocation:
 
     Routed through the jitted engine (zero v_max shares the same XLA
     program as the proposed scheme — no extra compile)."""
-    n = h2_sorted.shape[0]
-    zero_vmax = jnp.zeros((n,))
+    h2_sorted = jnp.asarray(h2_sorted)
+    zero_vmax = jnp.zeros(h2_sorted.shape, jnp.result_type(h2_sorted))
     return equilibrium(cfg, h2_sorted, D, zero_vmax, epsilon=0.0)
 
 
@@ -429,3 +781,11 @@ def batched_wo_dt_allocation(cfg: GameConfig, h2_batch, D_batch) -> Allocation:
     h2_batch = jnp.asarray(h2_batch)
     return batched_equilibrium(cfg, h2_batch, D_batch,
                                jnp.zeros_like(h2_batch), epsilon=0.0)
+
+
+def sweep_wo_dt_allocation(configs: Sequence[GameConfig], h2_batch,
+                           D) -> Allocation:
+    """C configs × K draws of the W/O-DT scheme (shares the sweep engine)."""
+    h2_batch = jnp.asarray(h2_batch)
+    zeros = jnp.zeros(h2_batch.shape[-2:], jnp.result_type(h2_batch))
+    return sweep_equilibrium(configs, h2_batch, D, zeros, epsilon=0.0)

@@ -1,0 +1,139 @@
+"""Batched baseline paths (ISSUE 2): OMA-FDMA / OMA-TDMA / random must be
+drop-in vmapped versions of the per-instance allocations, and
+``allocate_batched`` must accept every scheme the paper compares.
+
+ (a) batched == per-instance parity (≤1e-5 relative) for each baseline;
+ (b) Allocation leaves are all JAX arrays (python 0/True leaves would
+     break stacking/vmap of baseline allocations);
+ (c) ``allocate_batched`` covers proposed/ideal/wo_dt/oma/oma_tdma/random.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import sample_sic_channel_batch
+from repro.core.fl_round import allocate_batched
+from repro.core.stackelberg import (GameConfig, batched_oma_allocation,
+                                    batched_oma_tdma_allocation,
+                                    batched_random_allocation,
+                                    oma_allocation, oma_tdma_allocation,
+                                    random_allocation)
+
+CFG = GameConfig()
+N = 5
+K = 8
+REL = 1e-5
+
+
+def _inputs(seed: int = 0):
+    h2 = sample_sic_channel_batch(jax.random.PRNGKey(seed), K, N)
+    d = 100.0 + 200.0 * jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                                           (K, N))
+    vmax = 0.3 + 0.5 * jax.random.uniform(jax.random.PRNGKey(seed + 2),
+                                          (K, N))
+    return h2, d, vmax
+
+
+def _assert_rows_match(ab, singles):
+    for i, a1 in enumerate(singles):
+        for name in ("energy", "t_total"):
+            got, want = float(getattr(ab, name)[i]), float(getattr(a1, name))
+            assert abs(got - want) / max(abs(want), 1e-12) < REL, (name, i)
+        for name in ("p", "f", "v", "alpha", "rates"):
+            assert jnp.allclose(getattr(ab, name)[i], getattr(a1, name),
+                                rtol=REL, atol=0), (name, i)
+        assert bool(ab.feasible[i]) == bool(a1.feasible), i
+
+
+# ---------------------------------------------------------------------------
+# (a) batched == per-instance
+# ---------------------------------------------------------------------------
+def test_batched_oma_matches_per_instance():
+    h2, d, vmax = _inputs(10)
+    ab = batched_oma_allocation(CFG, h2, d, vmax)
+    assert ab.energy.shape == (K,)
+    _assert_rows_match(ab, [oma_allocation(CFG, h2[i], d[i], vmax[i])
+                            for i in range(K)])
+
+
+def test_batched_oma_tdma_matches_per_instance():
+    h2, d, vmax = _inputs(20)
+    ab = batched_oma_tdma_allocation(CFG, h2, d, vmax)
+    _assert_rows_match(ab, [oma_tdma_allocation(CFG, h2[i], d[i], vmax[i])
+                            for i in range(K)])
+
+
+def test_batched_random_matches_per_instance():
+    """Row i uses key split(key, K)[i] — exactly reproducible per-instance."""
+    h2, d, vmax = _inputs(30)
+    key = jax.random.PRNGKey(99)
+    ab = batched_random_allocation(CFG, key, h2, d, vmax)
+    keys = jax.random.split(key, K)
+    _assert_rows_match(ab, [random_allocation(CFG, keys[i], h2[i], d[i],
+                                              vmax[i]) for i in range(K)])
+
+
+def test_batched_baselines_broadcast_shared_inputs():
+    """[N] data sizes / v_max broadcast across the K draws (fig9b usage)."""
+    h2, _, _ = _inputs(40)
+    d = jnp.full((N,), 200.0)
+    vmax = jnp.full((N,), 0.5)
+    ab = batched_oma_allocation(CFG, h2, d, vmax)
+    a0 = oma_allocation(CFG, h2[0], d, vmax)
+    rel = abs(float(ab.energy[0]) - float(a0.energy)) / float(a0.energy)
+    assert rel < REL
+
+
+def test_tdma_round_latency_is_sequential():
+    """TDMA's round airtime is the SUM of the own-slot airtimes (the
+    paper's "insufficient clients per round" mechanism), so its t_com
+    dominates the FDMA variant's."""
+    h2, d, vmax = _inputs(50)
+    fdma = batched_oma_allocation(CFG, h2, d, vmax)
+    tdma = batched_oma_tdma_allocation(CFG, h2, d, vmax)
+    # every client in a TDMA row shares one round airtime
+    assert bool(jnp.all(jnp.abs(tdma.t_com - tdma.t_com[:, :1]) < 1e-6))
+    assert float(jnp.mean(tdma.t_com)) >= float(jnp.mean(fdma.t_com)) * 0.9
+
+
+# ---------------------------------------------------------------------------
+# (b) Allocation leaves are arrays — stacking/vmap safety
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make", [
+    lambda h2, d, vmax: random_allocation(CFG, jax.random.PRNGKey(0), h2, d,
+                                          vmax),
+    lambda h2, d, vmax: oma_allocation(CFG, h2, d, vmax),
+    lambda h2, d, vmax: oma_tdma_allocation(CFG, h2, d, vmax),
+], ids=["random", "oma", "oma_tdma"])
+def test_baseline_allocations_stack(make):
+    h2, d, vmax = _inputs(60)
+    a0 = make(h2[0], d[0], vmax[0])
+    a1 = make(h2[1], d[1], vmax[1])
+    for leaf in jax.tree_util.tree_leaves(a0):
+        assert isinstance(leaf, jax.Array), leaf   # no python 0/True leaves
+    assert a0.iterations.dtype == jnp.int32
+    assert a0.feasible.dtype == jnp.bool_
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), a0, a1)
+    assert stacked.energy.shape == (2,)
+    assert stacked.p.shape == (2, N)
+
+
+# ---------------------------------------------------------------------------
+# (c) allocate_batched accepts every scheme
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("scheme", ["proposed", "ideal", "wo_dt", "oma",
+                                    "oma_tdma", "random"])
+def test_allocate_batched_all_schemes(scheme):
+    h2, d, vmax = _inputs(70)
+    alloc = allocate_batched(scheme, CFG, h2, d, vmax,
+                             key=jax.random.PRNGKey(3))
+    assert alloc.energy.shape == (K,)
+    assert alloc.p.shape == (K, N)
+    assert bool(jnp.all(jnp.isfinite(alloc.energy)))
+    assert bool(jnp.all(jnp.isfinite(alloc.t_total)))
+
+
+def test_allocate_batched_unknown_scheme_raises():
+    h2, d, vmax = _inputs(80)
+    with pytest.raises(ValueError):
+        allocate_batched("nope", CFG, h2, d, vmax)
