@@ -7,6 +7,13 @@ execution paths at K ∈ {1, 64, 1024} independent 5-client realizations:
     program, still dispatched per instance;
   * vmap   — ``batched_equilibrium``: all K realizations in ONE XLA call;
 
+plus an ``n_scaling`` section profiling the batched engine across client
+counts N ∈ {5, 10, 20, 40, 64}: the reverse ``lax.scan`` in
+``successive_power`` (interference prefix-sum + per-client Dinkelbach
+chain) is inherently sequential in N, so its share of the solve grows with
+N — this section is the data grounding the ROADMAP's "Pallas kernel for
+the interference prefix-sum" decision;
+
 plus a ``sweep`` section timing the fig9-style config grid (10 points ×
 K=256 draws):
 
@@ -39,6 +46,10 @@ N_CLIENTS = 5
 K_VALUES = (1, 64, 1024)
 LEGACY_CAP = 16          # legacy instances actually timed at large K
 SWEEP_K = 256            # draws per config point in the sweep section
+N_SCALING = (5, 10, 20, 40, 64)   # client counts for the N-scaling profile
+N_SCALING_K = 48   # draws per point — NOT one of K_VALUES, so the (N=5, K)
+                   # shape is a fresh compile key and compile_wall_s is a
+                   # real measurement (K=64 was pre-warmed by the K sweep)
 SWEEP_TMAX = (4.0, 6.0, 8.0, 10.0, 12.0)
 SWEEP_MBITS = (0.5e6, 2.0e6)     # × SWEEP_TMAX → the 10-point fig9 grid
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -124,6 +135,48 @@ def _sweep_section():
     }
 
 
+def _n_scaling_section():
+    """Profile ``batched_equilibrium`` at K=64 across client counts N —
+    paper uses N=5, but larger cells stress the reverse ``lax.scan`` in
+    ``successive_power`` whose carry (the SIC interference prefix-sum)
+    serializes the per-client Dinkelbach solves.  ``client_solves_per_sec``
+    (= K·N / wall) is the normalized rate: if the prefix-sum chain
+    dominates, it degrades with N instead of holding flat, which is the
+    signal for moving it into a Pallas kernel (ROADMAP open item)."""
+    from repro.core.stackelberg import GameConfig, batched_equilibrium
+    cfg = GameConfig()
+    rows = []
+    for n in N_SCALING:
+        key = jax.random.PRNGKey(4000 + n)
+        h2 = mc_channel_draws(key, N_SCALING_K, n)
+        d = 100.0 + 200.0 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                               (N_SCALING_K, n))
+        vmax = 0.3 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                              (N_SCALING_K, n))
+        t0 = time.perf_counter()
+        out = batched_equilibrium(cfg, h2, d, vmax)
+        jax.block_until_ready(out.energy)
+        cold_s = time.perf_counter() - t0
+        warm_s = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = batched_equilibrium(cfg, h2, d, vmax)
+            jax.block_until_ready(out.energy)
+            warm_s = min(warm_s, time.perf_counter() - t0)
+        assert bool(jnp.all(jnp.isfinite(out.energy))), f"N={n}"
+        rows.append({
+            "N": n,
+            "K": N_SCALING_K,
+            "compile_wall_s": round(cold_s - warm_s, 3),
+            "warm_wall_s": round(warm_s, 4),
+            "solves_per_sec": round(_rate(warm_s, N_SCALING_K), 2),
+            "client_solves_per_sec": round(_rate(warm_s, N_SCALING_K * n), 2),
+            "us_per_client_per_solve": round(warm_s / (N_SCALING_K * n) * 1e6,
+                                             3),
+        })
+    return rows
+
+
 def run():
     from repro.core.stackelberg import (GameConfig, batched_equilibrium,
                                         equilibrium, equilibrium_eager)
@@ -188,10 +241,12 @@ def run():
         })
 
     sweep = _sweep_section()
+    n_scaling = _n_scaling_section()
 
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "stackelberg_equilibrium_throughput",
-                   "results": results, "sweep": sweep}, f, indent=2)
+                   "results": results, "sweep": sweep,
+                   "n_scaling": n_scaling}, f, indent=2)
 
     elapsed_us = (time.perf_counter() - t_start) * 1e6
     big = results[-1]
@@ -203,7 +258,9 @@ def run():
              f"target_20x_met={big['speedup_vmap_vs_legacy'] >= 20};"
              f"sweep_recompiles={sweep['sweep_recompiles']};"
              f"sweep_vs_static={sweep['speedup_sweep_cold_vs_static']}x;"
-             f"sweep_5x_met={sweep['speedup_sweep_cold_vs_static'] >= 5}")]
+             f"sweep_5x_met={sweep['speedup_sweep_cold_vs_static'] >= 5};"
+             f"nscale_cps_n5={n_scaling[0]['client_solves_per_sec']};"
+             f"nscale_cps_n64={n_scaling[-1]['client_solves_per_sec']}")]
 
 
 if __name__ == "__main__":

@@ -17,7 +17,7 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
-          "equilibrium")
+          "equilibrium", "training")
 
 
 def main() -> None:
@@ -46,6 +46,8 @@ def main() -> None:
                 from . import ablation_weights as mod
             elif suite == "equilibrium":
                 from . import equilibrium_throughput as mod
+            elif suite == "training":
+                from . import training_throughput as mod
             else:
                 from . import kernels_microbench as mod
             for name, us, derived in mod.run():

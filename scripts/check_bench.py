@@ -1,13 +1,22 @@
-"""Benchmark regression gate: fail if the Stackelberg engine's measured
-throughput in ``BENCH_equilibrium.json`` regressed more than TOLERANCE
-vs the committed baseline (``git show HEAD:BENCH_equilibrium.json``).
+"""Benchmark regression gate: fail if a tracked engine's measured
+throughput regressed more than TOLERANCE vs the committed baseline
+(``git show HEAD:<bench>.json``).
 
-Gated metrics (higher is better):
-  * ``results[].vmap_solves_per_sec``  — the K-axis Monte-Carlo path;
-  * ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine.
+Tracked bench files and their gated metrics (higher is better):
+  * ``BENCH_equilibrium.json``
+      - ``results[].vmap_solves_per_sec``  — the K-axis Monte-Carlo path;
+      - ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine.
+  * ``BENCH_training.json``
+      - ``scan_rounds_per_sec``  — the scan-compiled FL trajectory;
+      - ``vmap_rounds_per_sec``  — the seed-vmapped trajectory sweep.
+    (The host-loop baseline tier is recorded but not gated — it is the
+    slow reference, and its host-side dispatch overhead is the noisiest
+    number in the file.)
 
 Exit code 0 = pass (or nothing to compare: missing file, no git baseline,
-or baseline predates a metric).  Exit 1 = a gated metric regressed >20%.
+or the baseline predates a metric).  Exit 1 = a gated metric regressed
+>20% — or vanished from the current file while the baseline tracks it
+(a bench that silently stops reporting a rate must not pass the gate).
 Run directly or let ``scripts/dev_smoke.py`` invoke it.
 """
 from __future__ import annotations
@@ -18,21 +27,48 @@ import subprocess
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BENCH_JSON = os.path.join(REPO_ROOT, "BENCH_equilibrium.json")
-TOLERANCE = 0.20          # >20% drop in solves/sec fails the gate
+TOLERANCE = 0.20          # >20% drop in a gated rate fails the gate
 
 
-def _load_current():
-    if not os.path.exists(BENCH_JSON):
+def _equilibrium_metrics(doc) -> dict:
+    out = {}
+    for row in doc.get("results", []):
+        val = row.get("vmap_solves_per_sec")
+        if val is not None:          # keep 0.0: a collapsed rate must gate
+            out[f"vmap_K{row.get('K')}"] = float(val)
+    sweep = doc.get("sweep") or {}
+    if sweep.get("sweep_solves_per_sec") is not None:
+        out["sweep"] = float(sweep["sweep_solves_per_sec"])
+    return out
+
+
+def _training_metrics(doc) -> dict:
+    out = {}
+    for key, label in (("scan_rounds_per_sec", "scan"),
+                       ("vmap_rounds_per_sec", "vmap")):
+        if doc.get(key) is not None:
+            out[label] = float(doc[key])
+    return out
+
+
+BENCHES = (
+    ("BENCH_equilibrium.json", _equilibrium_metrics),
+    ("BENCH_training.json", _training_metrics),
+)
+
+
+def _load_current(name: str):
+    path = os.path.join(REPO_ROOT, name)
+    if not os.path.exists(path):
         return None
-    with open(BENCH_JSON) as f:
+    with open(path) as f:
         return json.load(f)
 
 
-def _load_committed():
+def _load_committed(name: str):
     try:
         blob = subprocess.run(
-            ["git", "show", "HEAD:BENCH_equilibrium.json"],
+            ["git", "show", f"HEAD:{name}"],
             cwd=REPO_ROOT, capture_output=True, text=True, check=True,
         ).stdout
         return json.loads(blob)
@@ -41,49 +77,50 @@ def _load_committed():
         return None
 
 
-def _gated_metrics(doc) -> dict:
-    """{label: solves_per_sec} for every gated metric present in ``doc``."""
-    out = {}
-    for row in doc.get("results", []):
-        val = row.get("vmap_solves_per_sec")
-        if val:
-            out[f"vmap_K{row.get('K')}"] = float(val)
-    sweep = doc.get("sweep") or {}
-    if sweep.get("sweep_solves_per_sec"):
-        out["sweep"] = float(sweep["sweep_solves_per_sec"])
-    return out
-
-
-def check(verbose: bool = True) -> int:
-    cur, ref = _load_current(), _load_committed()
+def _check_one(name: str, metrics_fn):
+    """Returns (failures, lines) for one bench file; skips when the file or
+    its committed baseline is absent."""
+    cur, ref = _load_current(name), _load_committed(name)
     if cur is None or ref is None:
-        if verbose:
-            why = "no BENCH_equilibrium.json" if cur is None else \
-                  "no committed baseline (git show failed)"
-            print(f"check_bench: SKIP ({why})")
-        return 0
-    cur_m, ref_m = _gated_metrics(cur), _gated_metrics(ref)
+        why = f"no {name}" if cur is None else \
+              f"no committed baseline for {name} (git show failed)"
+        return [], [f"  SKIP ({why})"]
+    cur_m, ref_m = metrics_fn(cur), metrics_fn(ref)
     failures, lines = [], []
     for label, ref_val in sorted(ref_m.items()):
         cur_val = cur_m.get(label)
         if cur_val is None:
-            lines.append(f"  {label}: dropped from bench (baseline "
-                         f"{ref_val:.0f}/s) — not gated")
+            # a gated metric the baseline tracks but the current file lost
+            # IS a failure — silently un-gating it would let a broken bench
+            # (or a total collapse written as a missing key) slip through
+            lines.append(f"  {label}: MISSING from current bench (baseline "
+                         f"{ref_val:.0f}/s) REGRESSED")
+            failures.append(f"{name}:{label}")
             continue
         ratio = cur_val / max(ref_val, 1e-9)
         status = "ok" if ratio >= 1.0 - TOLERANCE else "REGRESSED"
         lines.append(f"  {label}: {cur_val:.0f}/s vs baseline "
                      f"{ref_val:.0f}/s ({ratio:.2f}x) {status}")
         if status == "REGRESSED":
-            failures.append(label)
+            failures.append(f"{name}:{label}")
+    return failures, lines
+
+
+def check(verbose: bool = True) -> int:
+    all_failures = []
     if verbose:
-        print("check_bench: solves/sec vs committed baseline "
+        print("check_bench: tracked rates vs committed baseline "
               f"(tolerance -{TOLERANCE:.0%})")
-        for line in lines:
-            print(line)
-    if failures:
+    for name, metrics_fn in BENCHES:
+        failures, lines = _check_one(name, metrics_fn)
+        if verbose:
+            print(f" {name}:")
+            for line in lines:
+                print(line)
+        all_failures.extend(failures)
+    if all_failures:
         print(f"check_bench: FAIL — regressed >{TOLERANCE:.0%}: "
-              f"{', '.join(failures)}")
+              f"{', '.join(all_failures)}")
         return 1
     if verbose:
         print("check_bench: PASS")

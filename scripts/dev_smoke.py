@@ -96,6 +96,33 @@ for scheme in ("proposed", "wo_dt", "oma", "oma_tdma", "random"):
     assert a.energy.shape == (K,) and bool(jnp.all(jnp.isfinite(a.energy))), scheme
 print("allocate_batched OK for all schemes")
 
+# scan-compiled FL trajectory: R rounds in one lax.scan dispatch, round
+# body traced exactly once, stacked-metrics history
+from repro.core.channel import sample_positions
+from repro.core.digital_twin import DTConfig, sample_v_max
+from repro.core.fl_round import FLConfig, FLState, run_training_scan
+from repro.core.reputation import init_reputation
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_MNIST
+from repro.models.classifier import make_classifier
+
+_ks = jax.random.split(jax.random.PRNGKey(11), 6)
+_data = make_federated_data(_ks[0], SYNTHETIC_MNIST, m=10, cap=32)
+_params, _logits_fn = make_classifier("mlp", _ks[1], in_dim=784, hidden=16)
+_state = FLState(params=_params, rep=init_reputation(10),
+                 v_max=sample_v_max(_ks[2], 10, DTConfig()),
+                 distances=sample_positions(_ks[3], 10), key=_ks[4])
+_before = TRACE_COUNTS["run_round"]
+_fin, _hist = run_training_scan(_state, _data,
+                                FLConfig(n_selected=3, local_steps=4,
+                                         server_steps=4, lr=0.1),
+                                GameConfig(), _logits_fn, rounds=3)
+assert _hist["val_acc"].shape == (3,)
+assert bool(jnp.all(jnp.isfinite(_hist["val_acc"])))
+assert TRACE_COUNTS["run_round"] - _before == 1, "scan retraced run_round"
+print(f"run_training_scan OK: R=3, 1 trace, "
+      f"val_acc={float(_hist['val_acc'][-1]):.3f}")
+
 # benchmark regression gate (no-op when BENCH json / git baseline is absent)
 import pathlib, subprocess, sys
 _root = pathlib.Path(__file__).resolve().parents[1]

@@ -3,7 +3,9 @@ Stackelberg-game resource allocation and reputation-based client selection."""
 from .channel import (BANDWIDTH_HZ, noise_power, sample_channel_gains,
                       sample_positions, sample_round_channels)
 from .dinkelbach import dinkelbach_power, successive_power
-from .fl_round import FLConfig, FLState, run_round, run_training
+from .fl_round import (FLConfig, FLState, batched_training, run_round,
+                       run_training, run_training_eager, run_training_scan,
+                       stack_states)
 from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
                          init_reputation, select_clients)
 from .reputation import reputation as reputation_score
@@ -24,7 +26,9 @@ from .stackelberg import (Allocation, GameConfig, GamePhysics,
 __all__ = [
     "BANDWIDTH_HZ", "noise_power", "sample_channel_gains", "sample_positions",
     "sample_round_channels", "dinkelbach_power", "successive_power",
-    "FLConfig", "FLState", "run_round", "run_training", "BENCHMARK_WEIGHTS",
+    "FLConfig", "FLState", "run_round", "run_training", "run_training_eager",
+    "run_training_scan", "batched_training", "stack_states",
+    "BENCHMARK_WEIGHTS",
     "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
     "reputation_score", "select_clients", "Allocation", "GameConfig",
     "GamePhysics", "stack_physics", "equilibrium", "batched_equilibrium",

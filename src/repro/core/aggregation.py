@@ -20,6 +20,12 @@ def dt_aggregate(client_params, server_params, d_sizes, v, epsilon: float,
                     update itself (the twin mirrors poisoned data too).
     Excluded mass leaves the divisor — otherwise every exclusion uniformly
     shrinks the aggregate toward zero.
+
+    All-excluded rounds stay finite (zero numerator over the clamped
+    divisor → a zero tree, never NaN): the scanned trajectory
+    (``fl_round.run_training_scan``) computes the aggregate
+    unconditionally and keeps the previous global model via ``jnp.where``,
+    so this function must be safe to evaluate on empty include masks.
     """
     d_total = jnp.sum(d_sizes)
     w_local = (1.0 - v) * d_sizes

@@ -30,9 +30,14 @@ def mapped_sizes(v, d_sizes, epsilon: float):
     return v * d_sizes + epsilon
 
 
-def dt_feature_noise(key, x, epsilon: float):
-    """Apply the Fig.-6 deviation: x̂ = x·(1 + ε·u), u ~ U(−1,1) per element."""
-    if epsilon <= 0.0:
+def dt_feature_noise(key, x, epsilon):
+    """Apply the Fig.-6 deviation: x̂ = x·(1 + ε·u), u ~ U(−1,1) per element.
+
+    ``epsilon`` may be a traced scalar (the scanned FL trajectory passes it
+    as an operand); the ε = 0 short-circuit only fires for concrete python
+    zeros — the traced path computes x·(1 + 0·u) = x exactly, so both
+    agree bit-for-bit."""
+    if isinstance(epsilon, (int, float)) and epsilon <= 0.0:
         return x
     u = jax.random.uniform(key, x.shape, minval=-1.0, maxval=1.0)
     return x * (1.0 + epsilon * u)

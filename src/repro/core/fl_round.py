@@ -16,10 +16,35 @@ Round pipeline (§II–§V):
 
 Schemes: "proposed" (DT+NOMA), "wo_dt" (v≡0), "oma", "ideal" (no resource
 constraints), matching §VI-C benchmarks.
+
+Execution tiers — the whole R-round trajectory is ONE compiled program:
+
+  * ``_round_body``        — the trace-safe round: static arguments are the
+    discrete algorithm choices (scheme, use_roni, shapes/steps, logits_fn,
+    dinkelbach inner); every numeric knob (lr, ε, RONI threshold, selection
+    weights, the ``GamePhysics`` floats) is a traced operand, so distinct
+    ``FLConfig``/``GameConfig`` values reuse one executable.  The
+    "RONI rejected everything → keep the previous global model" decision is
+    a ``jnp.where`` over the parameter pytree, not a host branch.
+  * ``run_training_scan``  — R rounds as a single jitted ``lax.scan``
+    dispatch.  Metrics come back as a dict of stacked arrays with a leading
+    ``(R,)`` axis (``(R, N)`` for ``selected``) — the stacked-metrics
+    history format; ``stackelberg.TRACE_COUNTS['run_round']`` proves the
+    round body traces exactly once per (scheme, use_roni, shape).
+  * ``batched_training``   — ``vmap`` of the scan over a leading seed axis
+    (optionally with per-seed data, e.g. a poisoned-fraction axis): an
+    S-seed × R-round sweep is one dispatch, seed axis device-sharded.
+  * ``run_training``       — compat shim over ``run_training_scan``: same
+    list-of-dicts history (python scalars) as the legacy host loop.
+  * ``run_round`` / ``run_training_eager`` — the legacy host-side path
+    (one dispatch per stage, per-round host syncs), kept as the numerical
+    reference and the benchmark baseline of
+    ``benchmarks/training_throughput.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+import dataclasses
+from dataclasses import dataclass
 from functools import partial
 from typing import Callable, Dict, Tuple
 
@@ -31,7 +56,9 @@ from . import reputation as rep
 from .aggregation import dt_aggregate, fedavg
 from .digital_twin import dt_feature_noise, split_mapping_mask
 from .roni import roni_filter
-from .stackelberg import (Allocation, GameConfig, batched_equilibrium,
+from .stackelberg import (TRACE_COUNTS, Allocation, GameConfig,
+                          _oma_body, _physics_cached, _random_body,
+                          _shard_axis, _solve, batched_equilibrium,
                           batched_oma_allocation, batched_oma_tdma_allocation,
                           batched_random_allocation, batched_wo_dt_allocation,
                           equilibrium, oma_allocation, oma_tdma_allocation,
@@ -63,7 +90,14 @@ class FLState:
     v_max: jax.Array        # [M]
     distances: jax.Array    # [M]
     key: jax.Array
-    round: int = 0
+    round: jax.Array | int = 0
+
+
+# pytree registration: FLState is the lax.scan carry of the compiled
+# trajectory (every field is a data leaf; ``round`` rides as an int32 array).
+_FLSTATE_FIELDS = tuple(f.name for f in dataclasses.fields(FLState))
+jax.tree_util.register_dataclass(FLState, data_fields=_FLSTATE_FIELDS,
+                                 meta_fields=())
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +138,7 @@ def _val_acc(logits_fn, x_val, y_val, params):
 
 
 # ---------------------------------------------------------------------------
-# round
+# allocation dispatch (host-side tiers)
 # ---------------------------------------------------------------------------
 def allocate(scheme: str, game_cfg: GameConfig, key, h2_sorted, d_units,
              v_max_sel) -> Allocation:
@@ -180,14 +214,52 @@ def sweep_allocation(scheme: str, configs, h2_batch, d_batch, v_max_batch,
     raise ValueError(f"no sweep path for scheme {scheme!r}")
 
 
-def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
-              logits_fn: Callable) -> Tuple[FLState, Dict]:
-    m = data.num_clients
+def _allocate_traced(scheme: str, phys, inner: str, key, h2_sorted, d_units,
+                     v_max_sel) -> Allocation:
+    """Scheme dispatch inside the traced round body: direct calls into the
+    shared solver bodies with the traced ``GamePhysics`` — no nested jit
+    wrappers, no host syncs, one executable across GameConfig values.
+    ``scheme``/``inner`` are static (compile keys); everything else is an
+    operand."""
+    dtype = jnp.result_type(h2_sorted)
+    tol = jnp.asarray(1e-6, dtype)
+    eps0 = jnp.asarray(0.0, dtype)
+    if scheme in ("proposed", "ideal"):
+        return _solve(phys, h2_sorted, d_units, v_max_sel, eps0, 20, tol,
+                      inner)
+    if scheme == "wo_dt":
+        return _solve(phys, h2_sorted, d_units, jnp.zeros_like(h2_sorted),
+                      eps0, 20, tol, inner)
+    if scheme == "oma":
+        return _oma_body(phys, h2_sorted, d_units, v_max_sel, eps0, inner,
+                         tdma=False)
+    if scheme == "oma_tdma":
+        return _oma_body(phys, h2_sorted, d_units, v_max_sel, eps0, inner,
+                         tdma=True)
+    if scheme == "random":
+        return _random_body(phys, key, h2_sorted, d_units, v_max_sel, eps0)
+    raise ValueError(scheme)
+
+
+# ---------------------------------------------------------------------------
+# round (trace-safe body + legacy eager wrapper)
+# ---------------------------------------------------------------------------
+def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
+                use_roni: bool, n_selected: int, local_steps: int,
+                server_steps: int, inner: str,
+                logits_fn: Callable) -> Tuple[FLState, Dict]:
+    """One FL round as a pure traced function.
+
+    ``phys`` is the ``GamePhysics`` pytree; ``ops`` the dict of traced FL
+    scalars (lr / epsilon / roni_threshold / samples_per_unit / weights).
+    Returns (new_state, metrics) with metrics a dict of ARRAYS — under
+    ``lax.scan`` they stack into the (R, ...) history."""
+    m = data.x.shape[0]
     key, k_ch, k_map, k_dt, k_alloc = jax.random.split(state.key, 5)
 
     # 1. selection
-    sel, z = rep.select_clients(state.rep, data.sizes, fl.n_selected,
-                                fl.epsilon, fl.weights)
+    sel, _z = rep.select_clients(state.rep, data.sizes, n_selected,
+                                 ops["epsilon"], ops["weights"])
     sel_mask = jnp.zeros((m,), bool).at[sel].set(True)
 
     # 2. channel + SIC order (descending gain among the selected)
@@ -197,71 +269,74 @@ def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
     h2_sorted = h2[order]
 
     # 3. allocation
-    d_units = data.sizes[sel_sorted] * fl.samples_per_unit
+    d_units = data.sizes[sel_sorted] * ops["samples_per_unit"]
     v_max_sel = state.v_max[sel_sorted]
-    alloc = allocate(fl.scheme, game, k_alloc, h2_sorted, d_units, v_max_sel)
-    v = alloc.v if fl.scheme != "ideal" else jnp.zeros_like(alloc.v)
+    alloc = _allocate_traced(scheme, phys, inner, k_alloc, h2_sorted,
+                             d_units, v_max_sel)
+    v = alloc.v if scheme != "ideal" else jnp.zeros_like(alloc.v)
 
     # 4. DT split of the selected clients' data
-    xs, ys_true = data.x[sel_sorted], data.y[sel_sorted]
+    xs = data.x[sel_sorted]
     ys_train = data.y_train[sel_sorted]
     msk = data.mask[sel_sorted]
     map_mask = split_mapping_mask(k_map, msk, v)      # True = mapped to DT
-    if fl.scheme == "ideal":
+    if scheme == "ideal":
         map_mask = jnp.zeros_like(map_mask)
     local_w = (msk & ~map_mask).astype(jnp.float32)
 
     # 5a. local SGD (poisoners flip labels locally)
     client_params = local_train_all(logits_fn, state.params, xs, ys_train,
-                                    local_w, fl.local_steps, fl.lr)
+                                    local_w, local_steps, ops["lr"])
     # 5b. server/DT SGD on mapped data (ε feature deviation).  The twin
     # mirrors the client's data AS-IS — a poisoner's mapped samples carry
     # the flipped labels too (DT offers no anti-poison oracle; DESIGN.md §8)
     n, cap, dim = xs.shape
-    x_dt = dt_feature_noise(k_dt, xs, fl.epsilon).reshape(n * cap, dim)
+    x_dt = dt_feature_noise(k_dt, xs, ops["epsilon"]).reshape(n * cap, dim)
     server_params = sgd_train(logits_fn, state.params, x_dt,
                               ys_train.reshape(-1),
                               map_mask.reshape(-1).astype(jnp.float32),
-                              fl.server_steps, fl.lr)
+                              server_steps, ops["lr"])
 
     # 6. straggler deadline check (tolerance: the leader schedules
     # deadline-EXACT finishes, so `<=` would coin-flip on float error)
-    if fl.scheme == "ideal":
-        meets = jnp.ones((fl.n_selected,), bool)
+    if scheme == "ideal":
+        meets = jnp.ones((n_selected,), bool)
     else:
-        meets = (alloc.t_cmp + alloc.t_com) <= game.t_max * 1.001
+        meets = (alloc.t_cmp + alloc.t_com) <= phys.t_max * 1.001
 
     # 7. RONI
-    val_acc = partial(_val_acc, logits_fn, data.x_val, data.y_val)
-    if fl.use_roni:
+    if use_roni:
         # per-update RONI against the pre-round global model (Biscotti [31]);
         # the DT/server update is validated the same way — the twin mirrors
         # poisoned mapped data too
-        positive, _, _ = roni_filter(client_params, state.params,
-                                     d_units, v, fl.epsilon, logits_fn,
-                                     data.x_val, data.y_val,
-                                     fl.roni_threshold)
-        server_ok = _val_acc(logits_fn, data.x_val, data.y_val,
-                             state.params) - val_acc(server_params) \
-            <= fl.roni_threshold
+        positive, acc_base, _ = roni_filter(client_params, state.params,
+                                            d_units, v, ops["epsilon"],
+                                            logits_fn, data.x_val,
+                                            data.y_val,
+                                            ops["roni_threshold"])
+        server_ok = (acc_base[0]
+                     - _val_acc(logits_fn, data.x_val, data.y_val,
+                                server_params)) <= ops["roni_threshold"]
     else:
-        positive = jnp.ones((fl.n_selected,), bool)
+        positive = jnp.ones((n_selected,), bool)
         server_ok = jnp.asarray(True)
     include = positive & meets
 
     # 8. aggregation (Eq. 3); ideal uses plain FedAvg on full local data.
     # If RONI rejected EVERYTHING this round, keep the previous global model
-    # (an empty aggregate would zero the parameters).
-    any_included = bool(jnp.any(include)) or (fl.scheme != "ideal"
-                                              and bool(server_ok))
-    if not any_included:
-        new_params = state.params
-    elif fl.scheme == "ideal":
-        new_params = fedavg(client_params, d_units, include_mask=include)
+    # (an empty aggregate would zero the parameters) — a jnp.where over the
+    # parameter pytree, so the decision stays on-device inside the scan.
+    if scheme == "ideal":
+        agg = fedavg(client_params, d_units, include_mask=include)
+        any_included = jnp.any(include)
     else:
-        new_params = dt_aggregate(client_params, server_params, d_units, v,
-                                  fl.epsilon, include_mask=include,
-                                  server_include=server_ok)
+        agg = dt_aggregate(client_params, server_params, d_units, v,
+                           ops["epsilon"], include_mask=include,
+                           server_include=server_ok)
+        any_included = jnp.any(include) | server_ok
+    new_params = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(any_included, new, old),
+        agg, state.params)
 
     # 9. reputation bookkeeping
     new_rep = rep.update_interactions(state.rep, sel_sorted, positive)
@@ -270,14 +345,15 @@ def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
     metrics = {
         "round": state.round,
         "selected": sel_sorted,
-        "val_acc": float(val_acc(new_params)),
-        "latency": float(alloc.t_total),
-        "energy": float(alloc.energy),
-        "total_cost": float(alloc.t_total + alloc.energy),
-        "n_excluded_roni": int(jnp.sum(~positive)),
-        "n_stragglers": int(jnp.sum(~meets)),
-        "n_poisoned_selected": int(jnp.sum(data.poisoned[sel_sorted])),
-        "mean_v": float(jnp.mean(v)),
+        "val_acc": _val_acc(logits_fn, data.x_val, data.y_val, new_params),
+        "latency": alloc.t_total,
+        "energy": alloc.energy,
+        "total_cost": alloc.t_total + alloc.energy,
+        "n_excluded_roni": jnp.sum(~positive).astype(jnp.int32),
+        "n_stragglers": jnp.sum(~meets).astype(jnp.int32),
+        "n_poisoned_selected":
+            jnp.sum(data.poisoned[sel_sorted]).astype(jnp.int32),
+        "mean_v": jnp.mean(v),
     }
     new_state = FLState(params=new_params, rep=new_rep, v_max=state.v_max,
                         distances=state.distances, key=key,
@@ -285,10 +361,167 @@ def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
     return new_state, metrics
 
 
-def run_training(state: FLState, data: FedData, fl: FLConfig,
-                 game: GameConfig, logits_fn: Callable, rounds: int):
+def _fl_ops(fl: FLConfig, dtype) -> Dict:
+    """The traced-operand remainder of ``FLConfig`` (every numeric knob as
+    a device scalar), mirroring ``GameConfig.physics()``: sweeping lr / ε /
+    thresholds / selection weights reuses one executable."""
+    return {
+        "lr": jnp.asarray(fl.lr, dtype),
+        "epsilon": jnp.asarray(fl.epsilon, dtype),
+        "roni_threshold": jnp.asarray(fl.roni_threshold, dtype),
+        "samples_per_unit": jnp.asarray(fl.samples_per_unit, dtype),
+        "weights": jnp.asarray(fl.weights, dtype),
+    }
+
+
+def _canon_state(state: FLState) -> FLState:
+    """Fixed-dtype scan carry: a weak-typed python-int ``round`` would
+    retrace the scan (or fail the carry fixpoint)."""
+    return dataclasses.replace(state,
+                               round=jnp.asarray(state.round, jnp.int32))
+
+
+def _prep(state: FLState, fl: FLConfig, game: GameConfig):
+    dtype = jnp.result_type(jnp.asarray(state.distances))
+    return (_canon_state(state), _physics_cached(game, dtype),
+            _fl_ops(fl, dtype))
+
+
+def _static_kwargs(fl: FLConfig, game: GameConfig, logits_fn: Callable):
+    return dict(scheme=fl.scheme, use_roni=fl.use_roni,
+                n_selected=fl.n_selected, local_steps=fl.local_steps,
+                server_steps=fl.server_steps, inner=game.dinkelbach_inner,
+                logits_fn=logits_fn)
+
+
+def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
+              logits_fn: Callable) -> Tuple[FLState, Dict]:
+    """Legacy per-round entry point: executes the shared round body through
+    the eager stage-by-stage path and syncs metrics to python scalars (the
+    per-round host round-trips the scanned path exists to remove)."""
+    state, phys, ops = _prep(state, fl, game)
+    new_state, metrics = _round_body(state, data, phys, ops,
+                                     **_static_kwargs(fl, game, logits_fn))
+    host = {k: jax.device_get(v) for k, v in metrics.items()}
+    for k, v in host.items():
+        if k == "selected":
+            continue
+        host[k] = v.item()
+    return new_state, host
+
+
+def run_training_eager(state: FLState, data: FedData, fl: FLConfig,
+                       game: GameConfig, logits_fn: Callable, rounds: int):
+    """Legacy host-side round loop: R separate dispatch chains with
+    per-round metric syncs.  Kept as the numerical reference for the
+    scanned trajectory (tests) and as the baseline tier of
+    ``benchmarks/training_throughput.py``."""
     history = []
     for _ in range(rounds):
         state, metrics = run_round(state, data, fl, game, logits_fn)
         history.append(metrics)
     return state, history
+
+
+# ---------------------------------------------------------------------------
+# scan-compiled trajectory + seed-vmapped sweeps
+# ---------------------------------------------------------------------------
+_TRAINING_STATIC = ("scheme", "use_roni", "n_selected", "local_steps",
+                    "server_steps", "inner", "logits_fn", "rounds")
+
+
+@partial(jax.jit, static_argnames=_TRAINING_STATIC)
+def _training_scan_jit(phys, state, data, ops, *, rounds, **static):
+    TRACE_COUNTS["run_training_scan"] += 1
+
+    def body(carry, _):
+        TRACE_COUNTS["run_round"] += 1
+        return _round_body(carry, data, phys, ops, **static)
+
+    return jax.lax.scan(body, state, None, length=rounds)
+
+
+@partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
+def _batched_training_jit(phys, states, data, ops, *, rounds, data_batched,
+                          **static):
+    TRACE_COUNTS["batched_training"] += 1
+
+    def scan_one(st, dt):
+        def body(carry, _):
+            TRACE_COUNTS["run_round"] += 1
+            return _round_body(carry, dt, phys, ops, **static)
+
+        return jax.lax.scan(body, st, None, length=rounds)
+
+    if data_batched:
+        return jax.vmap(scan_one)(states, data)
+    return jax.vmap(lambda st: scan_one(st, data))(states)
+
+
+def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
+                      game: GameConfig, logits_fn: Callable, rounds: int):
+    """The whole R-round trajectory as ONE ``lax.scan`` dispatch of one
+    compiled program.
+
+    Returns ``(final_state, metrics)`` where ``metrics`` is a dict of
+    stacked arrays — scalars become ``(R,)``, ``selected`` becomes
+    ``(R, N)`` — i.e. the per-round dicts of the legacy path transposed
+    into arrays (``run_training`` converts back for compatibility).
+    Compile key: (scheme, use_roni, shapes/steps, rounds, logits_fn,
+    dinkelbach inner); all physics and FL scalars are traced operands, so
+    e.g. an lr or t_max sweep reuses the executable.
+    """
+    state, phys, ops = _prep(state, fl, game)
+    return _training_scan_jit(phys, state, data, ops, rounds=rounds,
+                              **_static_kwargs(fl, game, logits_fn))
+
+
+def run_training(state: FLState, data: FedData, fl: FLConfig,
+                 game: GameConfig, logits_fn: Callable, rounds: int):
+    """Compat shim over ``run_training_scan``: same signature and return
+    shape as the legacy host loop — a list of per-round metric dicts with
+    python scalars (``selected`` stays an ``[N]`` int array per round)."""
+    state, stacked = run_training_scan(state, data, fl, game, logits_fn,
+                                       rounds)
+    host = {k: jax.device_get(v) for k, v in stacked.items()}
+    history = [{k: (v[r] if v.ndim > 1 else v[r].item())
+                for k, v in host.items()} for r in range(rounds)]
+    return state, history
+
+
+def stack_states(states) -> FLState:
+    """Stack S per-seed ``FLState``s into one with a leading seed axis on
+    every leaf — the ``batched_training`` input layout."""
+    states = [_canon_state(s) for s in states]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def batched_training(states: FLState, data: FedData, fl: FLConfig,
+                     game: GameConfig, logits_fn: Callable, rounds: int):
+    """S independent R-round trajectories in ONE XLA dispatch: ``vmap`` of
+    the scanned round loop over a leading seed axis, device-sharded across
+    the seed axis (single-device no-op).
+
+    states : ``FLState`` with a leading S axis on every leaf (see
+             ``stack_states``) — typically S seeds of the same experiment.
+    data   : shared ``FedData``, or one with a leading S axis
+             (``data.x.ndim == 4``) for per-seed datasets — e.g. an
+             attacker-fraction axis where seed s was poisoned at ratio r_s.
+
+    Returns ``(final_states, metrics)`` with an extra leading S axis on
+    every leaf/metric relative to ``run_training_scan``.  Seed s of the
+    result equals ``run_training_scan`` on seed s alone (pure batching).
+    """
+    states, phys, ops = _prep(states, fl, game)
+    data_batched = data.x.ndim == 4
+    s = jax.tree_util.tree_leaves(states)[0].shape[0]
+    leaves, treedef = jax.tree_util.tree_flatten(states)
+    states = jax.tree_util.tree_unflatten(
+        treedef, _shard_axis(tuple(leaves), axis=0, size=s))
+    if data_batched:
+        dleaves, dtreedef = jax.tree_util.tree_flatten(data)
+        data = jax.tree_util.tree_unflatten(
+            dtreedef, _shard_axis(tuple(dleaves), axis=0, size=s))
+    return _batched_training_jit(phys, states, data, ops, rounds=rounds,
+                                 data_batched=data_batched,
+                                 **_static_kwargs(fl, game, logits_fn))

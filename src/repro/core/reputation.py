@@ -4,6 +4,7 @@ Z_n = ξ1·AC_n + ξ2·MS̄_n + ξ3·PI_n   (Eq. 16), top-N selected each round.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Tuple
 
@@ -21,6 +22,14 @@ class ReputationState:
     ms: jax.Array         # model staleness counters (Eq. 13)
     pi_count: jax.Array   # I_n^PI
     ni_count: jax.Array   # I_n^NI
+
+
+# pytree registration: the reputation bookkeeping rides inside the FLState
+# carry of the scanned training trajectory (fl_round.run_training_scan).
+jax.tree_util.register_dataclass(
+    ReputationState,
+    data_fields=tuple(f.name for f in dataclasses.fields(ReputationState)),
+    meta_fields=())
 
 
 def init_reputation(m: int) -> ReputationState:

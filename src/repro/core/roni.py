@@ -8,7 +8,10 @@ negative interaction (NI) and excludes it from aggregation.
 
 ``roni_filter`` is jit-cached on the (hashable) classifier function so the
 per-round leave-one-out sweep never retraces (an eager closure here
-recompiled the conv evaluation every FL round).
+recompiled the conv evaluation every FL round).  Everything else —
+including ``threshold`` — is a traced operand, so the filter inlines into
+the scan-compiled trajectory (``fl_round.run_training_scan``) and a
+threshold sweep reuses one executable.
 """
 from __future__ import annotations
 

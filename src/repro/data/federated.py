@@ -10,6 +10,7 @@ Poison : a fraction of clients flip labels y → (9 − y) on their LOCAL
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -32,6 +33,14 @@ class FedData:
     @property
     def num_clients(self) -> int:
         return self.x.shape[0]
+
+
+# pytree registration: the dataset crosses the jit boundary of the scanned
+# FL trajectory (fl_round.run_training_scan) as a traced operand, and
+# batched_training may carry a leading seed axis on every leaf.
+jax.tree_util.register_dataclass(
+    FedData, data_fields=tuple(f.name for f in dataclasses.fields(FedData)),
+    meta_fields=())
 
 
 def make_federated_data(key, spec: ImageProxySpec, m: int = 20,

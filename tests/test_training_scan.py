@@ -1,0 +1,210 @@
+"""Scan-compiled FL trajectory tests (ISSUE 3 tentpole).
+
+Three properties of ``run_training_scan`` / ``batched_training``:
+
+  * parity — the scanned trajectory matches the legacy host-loop
+    (``run_training_eager``) on final params and per-round metrics, for
+    proposed + ideal schemes, with and without RONI;
+  * compile behavior — ``TRACE_COUNTS['run_round']`` shows the round body
+    traces exactly ONCE per (scheme, use_roni, shape) for an R-round scan
+    and for an S-seed vmap, and numeric knobs (lr, ε, t_max) are traced
+    operands, not compile keys;
+  * trace-safe bookkeeping — a round where RONI rejects every update keeps
+    the previous global params INSIDE the scan (no host branch).
+
+Shapes here are deliberately unusual (M=11 pool, hidden=24) so earlier
+tests cannot have pre-warmed the jit cache and trace deltas are real.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import sample_positions
+from repro.core.digital_twin import DTConfig, sample_v_max
+from repro.core.fl_round import (FLConfig, FLState, batched_training,
+                                 run_training, run_training_eager,
+                                 run_training_scan, stack_states)
+from repro.core.reputation import init_reputation
+from repro.core.stackelberg import GameConfig, TRACE_COUNTS
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_MNIST
+from repro.models.classifier import make_classifier
+
+M, CAP, HID, NSEL = 11, 48, 24, 3
+REL = 1e-5
+SCALAR_METRICS = ("val_acc", "latency", "energy", "total_cost", "mean_v")
+INT_METRICS = ("round", "n_excluded_roni", "n_stragglers",
+               "n_poisoned_selected")
+
+
+def _setup(seed=0, poison=0.25, m=M, cap=CAP, hidden=HID):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    data = make_federated_data(ks[0], SYNTHETIC_MNIST, m=m, cap=cap,
+                               poison_ratio=poison)
+    params, logits_fn = make_classifier("mlp", ks[1], in_dim=784,
+                                        hidden=hidden)
+    state = FLState(params=params, rep=init_reputation(m),
+                    v_max=sample_v_max(ks[2], m, DTConfig()),
+                    distances=sample_positions(ks[3], m), key=ks[4])
+    return state, data, logits_fn
+
+
+def _fl(**kw):
+    kw.setdefault("n_selected", NSEL)
+    kw.setdefault("local_steps", 6)
+    kw.setdefault("server_steps", 6)
+    kw.setdefault("lr", 0.1)
+    return FLConfig(**kw)
+
+
+def _rel_params(a, b):
+    """Per-leaf max |a−b| normalized by the leaf's magnitude."""
+    return max(float(jnp.max(jnp.abs(x - y)) /
+                     jnp.maximum(jnp.max(jnp.abs(y)), 1e-12))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def _assert_scan_matches_eager(scheme, use_roni, rounds=4, seed=0,
+                               params_rel=REL):
+    state, data, logits_fn = _setup(seed=seed)
+    fl = _fl(scheme=scheme, use_roni=use_roni)
+    game = GameConfig()
+    fs, stacked = run_training_scan(state, data, fl, game, logits_fn, rounds)
+    es, hist = run_training_eager(state, data, fl, game, logits_fn, rounds)
+    assert _rel_params(fs.params, es.params) < params_rel, (scheme, use_roni)
+    assert _rel_params(fs.rep, es.rep) == 0.0
+    for k in SCALAR_METRICS:
+        ref = jnp.asarray([h[k] for h in hist])
+        rel = float(jnp.max(jnp.abs(stacked[k] - ref)
+                            / jnp.maximum(jnp.abs(ref), 1e-12)))
+        assert rel < REL, (scheme, use_roni, k, rel)
+    for k in INT_METRICS:
+        assert [int(x) for x in stacked[k]] == [int(h[k]) for h in hist], k
+    assert stacked["selected"].shape == (rounds, NSEL)
+    for r, h in enumerate(hist):
+        assert stacked["selected"][r].tolist() == h["selected"].tolist()
+
+
+@pytest.mark.parametrize("scheme,use_roni", [("proposed", True),
+                                             ("proposed", False),
+                                             ("ideal", True),
+                                             ("ideal", False)])
+def test_scan_matches_host_loop(scheme, use_roni):
+    _assert_scan_matches_eager(scheme, use_roni)
+
+
+@pytest.mark.slow
+def test_scan_matches_host_loop_long():
+    """R = 20: per-round metrics stay ≤ 1e-5 rel and the discrete
+    trajectory (selection, RONI verdicts, stragglers) is identical; the raw
+    weights accumulate fp32 fusion-reordering drift through R×steps SGD
+    updates, so they get a proportionally looser bound."""
+    _assert_scan_matches_eager("proposed", True, rounds=20, seed=3,
+                               params_rel=5e-3)
+
+
+def test_run_training_shim_history_format():
+    """The compat shim returns the legacy list-of-dicts history with python
+    scalars (``selected`` stays an [N] int array per round)."""
+    state, data, logits_fn = _setup(seed=1)
+    fl = _fl()
+    _, hist = run_training(state, data, fl, GameConfig(), logits_fn, 3)
+    assert len(hist) == 3
+    for r, h in enumerate(hist):
+        assert isinstance(h["val_acc"], float)
+        assert isinstance(h["n_excluded_roni"], int)
+        assert h["round"] == r
+        assert len(h["selected"]) == NSEL
+
+
+# ---------------------------------------------------------------------------
+# compile behavior
+# ---------------------------------------------------------------------------
+def test_scan_traces_round_body_once():
+    """An R-round training is ONE ``lax.scan`` dispatch: the round body
+    traces exactly once, and changing R or any numeric knob (lr, ε, t_max)
+    must not retrace it — only (scheme, use_roni, shape) are compile keys."""
+    state, data, logits_fn = _setup(seed=2, m=13, hidden=20)
+    fl = _fl(scheme="wo_dt")       # scheme not used by other tests here
+    game = GameConfig()
+    before = TRACE_COUNTS["run_round"]
+    _, stacked = run_training_scan(state, data, fl, game, logits_fn, 6)
+    assert stacked["val_acc"].shape == (6,)
+    assert TRACE_COUNTS["run_round"] - before == 1
+
+    run_training_scan(state, data, fl, game, logits_fn, 6)
+    assert TRACE_COUNTS["run_round"] - before == 1, "re-dispatch retraced"
+
+    fl2 = dataclasses.replace(fl, lr=0.07, epsilon=0.2, roni_threshold=0.05)
+    game2 = dataclasses.replace(game, t_max=8.0, bandwidth=2e6)
+    run_training_scan(state, data, fl2, game2, logits_fn, 6)
+    assert TRACE_COUNTS["run_round"] - before == 1, \
+        "numeric FL/game knobs must be traced operands, not compile keys"
+
+
+def test_batched_training_traces_round_body_once():
+    """An S-seed × R-round sweep is one vmapped scan: one trace of the
+    round body, and every seed matches its own sequential scan."""
+    per_seed = [_setup(seed=s, m=13, hidden=20) for s in range(3)]
+    states = stack_states([s for s, _, _ in per_seed])
+    data, logits_fn = per_seed[0][1], per_seed[0][2]
+    fl = _fl(scheme="wo_dt")
+    game = GameConfig()
+    before = TRACE_COUNTS["run_round"]
+    bstate, bm = batched_training(states, data, fl, game, logits_fn, 4)
+    assert TRACE_COUNTS["run_round"] - before == 1
+    assert bm["val_acc"].shape == (3, 4)
+    assert bm["selected"].shape == (3, 4, NSEL)
+    for s in range(3):
+        _, ref = run_training_scan(per_seed[s][0], data, fl, game,
+                                   logits_fn, 4)
+        rel = float(jnp.max(jnp.abs(bm["val_acc"][s] - ref["val_acc"])))
+        assert rel < REL, s
+        assert bm["selected"][s].tolist() == ref["selected"].tolist()
+    assert TRACE_COUNTS["run_round"] - before == 2, \
+        "per-seed reference scans share one (earlier-cached) trace"
+
+
+def test_batched_training_per_seed_data_axis():
+    """Per-seed datasets (e.g. an attacker-fraction axis) vmap alongside
+    the seed axis and match per-dataset sequential scans."""
+    a = _setup(seed=4, poison=0.0, m=13, hidden=20)
+    b = _setup(seed=5, poison=0.4, m=13, hidden=20)
+    states = stack_states([a[0], b[0]])
+    data = jax.tree_util.tree_map(lambda x, y: jnp.stack([x, y]), a[1], b[1])
+    fl = _fl(scheme="wo_dt")
+    game = GameConfig()
+    _, bm = batched_training(states, data, fl, game, logits_fn=a[2],
+                             rounds=3)
+    assert bm["val_acc"].shape == (2, 3)
+    for s, (st, dt, fn) in enumerate((a, b)):
+        _, ref = run_training_scan(st, dt, fl, game, fn, 3)
+        assert float(jnp.max(jnp.abs(bm["val_acc"][s]
+                                     - ref["val_acc"]))) < REL, s
+    assert int(jnp.sum(bm["n_poisoned_selected"][0])) == 0
+    assert int(jnp.sum(bm["n_poisoned_selected"][1])) >= 1
+
+
+# ---------------------------------------------------------------------------
+# trace-safe keep-previous-params
+# ---------------------------------------------------------------------------
+def test_empty_include_keeps_previous_params_inside_scan():
+    """With an impossible RONI threshold every update (clients AND the
+    DT/server one) is rejected each round; the keep-previous-params
+    ``jnp.where`` must leave the global model bit-identical across the
+    whole scanned trajectory."""
+    state, data, logits_fn = _setup(seed=6)
+    fl = _fl(roni_threshold=-10.0)     # acc would have to IMPROVE by 10
+    final, stacked = run_training_scan(state, data, fl, GameConfig(),
+                                       logits_fn, 4)
+    assert [int(x) for x in stacked["n_excluded_roni"]] == [NSEL] * 4
+    for new, old in zip(jax.tree_util.tree_leaves(final.params),
+                        jax.tree_util.tree_leaves(state.params)):
+        assert bool(jnp.all(new == old))
+    # val_acc is therefore flat at the initial model's accuracy
+    assert float(jnp.max(stacked["val_acc"])
+                 - jnp.min(stacked["val_acc"])) == 0.0
