@@ -33,21 +33,21 @@ def timed(fn, *args, iters: int = 3, warmup: int = 1):
     return out, (time.perf_counter() - t0) / iters * 1e6  # us
 
 
-def fl_experiment(seed: int, dataset: str = "mnist", scheme: str = "proposed",
-                  poison_ratio: float = 0.0, epsilon: float = 0.0,
-                  weights=None, rounds: int = 20, iid: bool = True,
-                  m: int = 20, cap: int = 128, n_selected: int = 5,
-                  use_roni: bool = True, game: GameConfig | None = None):
-    """Run one FL training curve; returns history (list of per-round dicts)."""
+def fl_setup(seed: int, dataset: str = "mnist", poison_ratio: float = 0.0,
+             iid: bool = True, m: int = 20, cap: int = 128):
+    """The data/model/state triple of one figure-bench cell:
+    ``(state, data, logits_fn)``, keyed exactly as ``fl_experiment`` keys
+    them (same PRNG split order), so grid cells that share
+    (seed, dataset) differ ONLY in the knob under sweep.
+
+    Both proxies use the MLP head in the benchmark harness: the phenomena
+    under test (selection/poisoning/DT-deviation dynamics) are
+    distribution-level, and XLA-on-CPU convolutions are ~40 s/round —
+    they would dominate the harness without informing the claims.  The
+    CNN path stays in the library (models/classifier.py) and is covered
+    by tests.  CIFAR-proxy difficulty comes from its lower class
+    separation (DESIGN.md §6)."""
     spec = SYNTHETIC_MNIST if dataset == "mnist" else SYNTHETIC_CIFAR
-    # Both proxies use the MLP head in the benchmark harness: the phenomena
-    # under test (selection/poisoning/DT-deviation dynamics) are
-    # distribution-level, and XLA-on-CPU convolutions are ~40 s/round —
-    # they would dominate the harness without informing the claims.  The
-    # CNN path stays in the library (models/classifier.py) and is covered
-    # by tests.  CIFAR-proxy difficulty comes from its lower class
-    # separation (DESIGN.md §6).
-    kind = "mlp"
     key = jax.random.PRNGKey(seed)
     ks = jax.random.split(key, 5)
     lpc = 1 if dataset == "mnist" else 5
@@ -55,14 +55,42 @@ def fl_experiment(seed: int, dataset: str = "mnist", scheme: str = "proposed",
                                labels_per_client=lpc,
                                poison_ratio=poison_ratio)
     params, logits_fn = make_classifier(
-        kind, ks[1], in_dim=spec.dim, hidden=64 if dataset == "mnist" else 96)
-    from repro.core.reputation import PROPOSED_WEIGHTS
-    fl = FLConfig(n_selected=n_selected, local_steps=40, server_steps=40,
-                  lr=0.1, epsilon=epsilon, scheme=scheme, roni_threshold=0.02,
-                  weights=weights or PROPOSED_WEIGHTS, use_roni=use_roni)
+        "mlp", ks[1], in_dim=spec.dim, hidden=64 if dataset == "mnist" else 96)
     state = FLState(params=params, rep=init_reputation(m),
                     v_max=sample_v_max(ks[2], m, DTConfig()),
                     distances=sample_positions(ks[3], m), key=ks[4])
+    return state, data, logits_fn
+
+
+def fl_bench_config(scheme: str = "proposed", epsilon: float = 0.0,
+                    weights=None, use_roni: bool = True,
+                    n_selected: int = 5) -> FLConfig:
+    """The figure-bench ``FLConfig`` (shared by the per-cell and swept
+    paths, so the two stay numerically comparable)."""
+    from repro.core.reputation import PROPOSED_WEIGHTS
+    return FLConfig(n_selected=n_selected, local_steps=40, server_steps=40,
+                    lr=0.1, epsilon=epsilon, scheme=scheme,
+                    roni_threshold=0.02,
+                    weights=weights or PROPOSED_WEIGHTS, use_roni=use_roni)
+
+
+def stack_data(datasets):
+    """Stack per-cell ``FedData`` (identical shapes) along a new leading
+    axis — the per-seed data axis of ``batched_training``/``sweep_training``
+    (fig5's poison-ratio axis, fig78's IID/non-IID axis)."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *datasets)
+
+
+def fl_experiment(seed: int, dataset: str = "mnist", scheme: str = "proposed",
+                  poison_ratio: float = 0.0, epsilon: float = 0.0,
+                  weights=None, rounds: int = 20, iid: bool = True,
+                  m: int = 20, cap: int = 128, n_selected: int = 5,
+                  use_roni: bool = True, game: GameConfig | None = None):
+    """Run one FL training curve; returns history (list of per-round dicts)."""
+    state, data, logits_fn = fl_setup(seed, dataset, poison_ratio=poison_ratio,
+                                      iid=iid, m=m, cap=cap)
+    fl = fl_bench_config(scheme=scheme, epsilon=epsilon, weights=weights,
+                         use_roni=use_roni, n_selected=n_selected)
     state, hist = run_training(state, data, fl, game or GameConfig(),
                                logits_fn, rounds)
     return hist

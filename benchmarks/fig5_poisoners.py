@@ -1,7 +1,15 @@
 """Fig. 5 — FL accuracy vs #poisoners: proposed (AC+MS+PI reputation) vs
 benchmark (AC+MS only, PI-blind).
 
-Claims verified (on the synthetic proxies — DESIGN.md §6):
+Grid layout under the training sweep engine: the attacker-fraction axis
+rides the per-seed DATA axis of ``sweep_training`` (the three poison
+ratios are three stacked datasets sharing one model/state), while scheme
+(selection weights + RONI on/off) stays a static key — so the whole
+figure is ONE dispatch per (dataset, scheme), not one per cell.
+
+Claims verified (on the synthetic proxies — DESIGN.md §6), read straight
+off the stacked ``(C, S, R)`` metrics (mean over the config axis, then
+max of the last 5 rounds):
   * 0% poisoners: proposed ≈ benchmark;
   * 30%/50% poisoners: proposed > benchmark (RONI-driven PI term excludes
     poisoned updates from selection and aggregation)."""
@@ -9,26 +17,35 @@ from __future__ import annotations
 
 import time
 
-from repro.core.reputation import BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS
+import jax.numpy as jnp
 
-from .common import curve, fl_experiment, save_csv
+from repro.core.fl_round import stack_states, sweep_training
+from repro.core.reputation import BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS
+from repro.core.stackelberg import GameConfig
+
+from .common import fl_bench_config, fl_setup, save_csv, stack_data
 
 ROUNDS = 16
+RATIOS = (0.0, 0.3, 0.5)
+SCHEMES = (("proposed", PROPOSED_WEIGHTS, True),
+           ("benchmark", BENCHMARK_WEIGHTS, False))
 
 
 def run():
-    out_rows = []
-    results = {}
     t0 = time.perf_counter()
+    acc = {}            # (dataset, scheme) -> (C=1, S=|ratios|, R) val_acc
     for dataset in ("mnist", "cifar"):
-        for ratio in (0.0, 0.3, 0.5):
-            for scheme_name, w, roni in (("proposed", PROPOSED_WEIGHTS, True),
-                                         ("benchmark", BENCHMARK_WEIGHTS, False)):
-                hist = fl_experiment(seed=7, dataset=dataset,
-                                     poison_ratio=ratio, weights=w,
-                                     use_roni=roni, rounds=ROUNDS)
-                acc = curve(hist)
-                results[(dataset, ratio, scheme_name)] = acc
+        setups = [fl_setup(7, dataset, poison_ratio=r) for r in RATIOS]
+        logits_fn = setups[0][2]
+        states = stack_states([s for s, _, _ in setups])
+        data = stack_data([d for _, d, _ in setups])
+        for scheme_name, w, roni in SCHEMES:
+            fl = fl_bench_config(weights=w, use_roni=roni)
+            _, metrics = sweep_training(states, data, [fl], GameConfig(),
+                                        logits_fn, ROUNDS)
+            acc[(dataset, scheme_name)] = metrics["val_acc"]
+    results = {(d, r, s): [float(x) for x in acc[(d, s)][0, i]]
+               for d, s in acc for i, r in enumerate(RATIOS)}
     rows = []
     for r in range(ROUNDS):
         row = [r]
@@ -41,14 +58,15 @@ def run():
 
     elapsed_us = (time.perf_counter() - t0) * 1e6
     checks = []
+    # final accuracy per ratio, straight off the stacked (C, S, R) metrics:
+    # mean over the config axis (size 1 here), max of the last 5 rounds → [S]
+    final = {k: jnp.max(jnp.mean(a, axis=0)[:, -5:], axis=-1)
+             for k, a in acc.items()}
     for dataset in ("mnist", "cifar"):
-        final = {k: max(v[-5:]) for k, v in results.items() if k[0] == dataset}
-        same0 = abs(final[(dataset, 0.0, "proposed")]
-                    - final[(dataset, 0.0, "benchmark")]) < 0.15
-        better30 = final[(dataset, 0.3, "proposed")] >= \
-            final[(dataset, 0.3, "benchmark")] - 0.02
-        better50 = final[(dataset, 0.5, "proposed")] >= \
-            final[(dataset, 0.5, "benchmark")] - 0.02
+        prop, bench = final[(dataset, "proposed")], final[(dataset, "benchmark")]
+        same0 = bool(jnp.abs(prop[0] - bench[0]) < 0.15)
+        better30 = bool(prop[1] >= bench[1] - 0.02)
+        better50 = bool(prop[2] >= bench[2] - 0.02)
         checks.append(f"{dataset}:0pct_close={same0};30pct_ge={better30};"
                       f"50pct_ge={better50}")
     return [("fig5_poisoners_sweep", elapsed_us, "|".join(checks))]

@@ -1,12 +1,20 @@
 """Fig. 6 — FL accuracy vs DT mapping deviation ε.
 
+The ε grid is the canonical config-axis sweep: per dataset, all |ε|
+deviation points share one state/dataset and differ only in the traced
+``FLConfig.epsilon`` knob, so the WHOLE figure is one ``sweep_training``
+dispatch per dataset (C = |ε| configs × S = 1 seed × R rounds, round body
+traced once) instead of a host loop over per-cell training runs.
+
 Claims verified: accuracy degrades as ε grows; the harder (CIFAR-proxy)
-dataset is more sensitive to deviation than the MNIST proxy.  A batched
-game-level precheck additionally verifies the resource-side mechanism:
-ε inflates the DT-mapped data size D̂ = v·D + ε, so the server must commit
-a strictly larger total frequency share Σα to keep the equal-finish-time
-schedule of Theorem 1 (Eq. 26; the finish times themselves stay pinned at
-t_total in the slack regime, so Σα is the observable)."""
+dataset is more sensitive to deviation than the MNIST proxy.  The final
+accuracies are read straight off the stacked ``(C, S, R)`` metrics (mean
+over the seed axis, then max of the last 5 rounds).  A batched game-level
+precheck additionally verifies the resource-side mechanism: ε inflates the
+DT-mapped data size D̂ = v·D + ε, so the server must commit a strictly
+larger total frequency share Σα to keep the equal-finish-time schedule of
+Theorem 1 (Eq. 26; the finish times themselves stay pinned at t_total in
+the slack regime, so Σα is the observable)."""
 from __future__ import annotations
 
 import time
@@ -14,7 +22,10 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .common import curve, fl_experiment, save_csv
+from repro.core.fl_round import stack_states, sweep_training
+from repro.core.stackelberg import GameConfig
+
+from .common import fl_bench_config, fl_setup, save_csv
 
 ROUNDS = 16
 EPSILONS = (0.0, 0.3, 0.6)
@@ -24,7 +35,7 @@ def _mc_dt_server_shares(epsilons, k: int = 128, n: int = 5):
     """Mean total DT frequency share Σα over K realizations, for ALL
     deviation points at once: ε rides the sweep engine's config axis, so
     the whole precheck is ONE XLA dispatch (|ε| configs × K draws)."""
-    from repro.core.stackelberg import GameConfig, sweep_equilibrium
+    from repro.core.stackelberg import sweep_equilibrium
     from .common import mc_channel_draws
     key = jax.random.PRNGKey(42)
     h2 = mc_channel_draws(key, k, n)
@@ -39,12 +50,15 @@ def _mc_dt_server_shares(epsilons, k: int = 128, n: int = 5):
 
 def run():
     t0 = time.perf_counter()
-    results = {}
+    acc = {}            # dataset -> (C=|eps|, S=1, R) stacked val_acc
     for dataset in ("mnist", "cifar"):
-        for eps in EPSILONS:
-            hist = fl_experiment(seed=11, dataset=dataset, epsilon=eps,
-                                 rounds=ROUNDS)
-            results[(dataset, eps)] = curve(hist)
+        state, data, logits_fn = fl_setup(11, dataset)
+        fls = [fl_bench_config(epsilon=e) for e in EPSILONS]
+        _, metrics = sweep_training(stack_states([state]), data, fls,
+                                    GameConfig(), logits_fn, ROUNDS)
+        acc[dataset] = metrics["val_acc"]
+    results = {(d, e): [float(x) for x in acc[d][i, 0]]
+               for d in acc for i, e in enumerate(EPSILONS)}
     rows = [[r] + [round(results[k][r], 4) for k in sorted(results)]
             for r in range(ROUNDS)]
     save_csv("fig6_dt_deviation",
@@ -52,12 +66,15 @@ def run():
              rows)
     elapsed_us = (time.perf_counter() - t0) * 1e6
     checks = []
+    # final accuracy per ε point, straight off the stacked (C, S, R) grid:
+    # mean over the seed axis, then best of the last 5 rounds → [C]
+    final = {d: jnp.max(jnp.mean(a, axis=1)[:, -5:], axis=-1)
+             for d, a in acc.items()}
     for dataset in ("mnist", "cifar"):
-        final = {e: max(results[(dataset, e)][-5:]) for e in EPSILONS}
-        mono = final[0.0] >= final[0.6] - 0.03
+        mono = bool(final[dataset][0] >= final[dataset][-1] - 0.03)
         checks.append(f"{dataset}:eps0_ge_eps0.6={mono}")
-    gap_m = max(results[("mnist", 0.0)][-5:]) - max(results[("mnist", 0.6)][-5:])
-    gap_c = max(results[("cifar", 0.0)][-5:]) - max(results[("cifar", 0.6)][-5:])
+    gap_m = float(final["mnist"][0] - final["mnist"][-1])
+    gap_c = float(final["cifar"][0] - final["cifar"][-1])
     checks.append(f"cifar_more_sensitive={gap_c >= gap_m - 0.05}")
     shares = _mc_dt_server_shares(EPSILONS)
     checks.append(f"mc_dt_server_share_monotone_in_eps="

@@ -1,10 +1,17 @@
 """Figs. 7–8 — FL accuracy across schemes (proposed / W-O DT / OMA / ideal)
 with 30% poisoners, on IID and non-IID splits of both dataset proxies.
 
+Grid layout under the training sweep engine: the IID/non-IID axis rides
+the per-seed DATA axis of ``sweep_training`` (two stacked splits sharing
+one model/state), scheme stays a static compile key — so each figure is
+ONE dispatch per scheme, not one per (split, scheme) cell.
+
 Claims verified: ideal ≥ proposed ≥ {wo_dt, oma}; non-IID degrades accuracy;
 all schemes use the reputation-based selection (fair comparison, §VI-C).
-A batched game-level precheck verifies the resource premise underlying the
-accuracy gap — DT mapping saves client energy over the channel distribution
+Final accuracies are read straight off the stacked ``(C, S, R)`` metrics
+(mean over the config axis, then max of the last 5 rounds).  A batched
+game-level precheck verifies the resource premise underlying the accuracy
+gap — DT mapping saves client energy over the channel distribution
 (K realizations, one vmapped Stackelberg solve per scheme)."""
 from __future__ import annotations
 
@@ -13,7 +20,11 @@ import time
 import jax
 import jax.numpy as jnp
 
-from .common import curve, fl_experiment, mc_equilibrium_stats, save_csv
+from repro.core.fl_round import stack_states, sweep_training
+from repro.core.stackelberg import GameConfig
+
+from .common import (fl_bench_config, fl_setup, mc_equilibrium_stats,
+                     save_csv, stack_data)
 
 ROUNDS = 16
 SCHEMES = ("proposed", "wo_dt", "oma", "ideal")
@@ -23,7 +34,6 @@ def _mc_energy_precheck(k: int = 128, n: int = 5) -> bool:
     """Mean equilibrium energy over K draws, ONE batched XLA call per
     scheme: proposed (DT) < wo_dt, and proposed ≤ the OMA baseline (now
     batched too) — the resource premise behind the accuracy gap."""
-    from repro.core.stackelberg import GameConfig
     key = jax.random.PRNGKey(7)
     d = jnp.full((n,), 200.0)
     vmax = jnp.full((n,), 0.5)
@@ -40,31 +50,42 @@ def run():
     out = []
     mc_ok = _mc_energy_precheck()
     for dataset, fig in (("mnist", "fig7"), ("cifar", "fig8")):
-        results = {}
-        for iid in (True, False):
-            for scheme in SCHEMES:
-                hist = fl_experiment(seed=13, dataset=dataset, scheme=scheme,
-                                     poison_ratio=0.3, rounds=ROUNDS,
-                                     iid=iid)
-                results[(iid, scheme)] = curve(hist)
+        # S axis = (IID, non-IID) splits; the state/model is shared
+        setups = [fl_setup(13, dataset, poison_ratio=0.3, iid=iid)
+                  for iid in (True, False)]
+        logits_fn = setups[0][2]
+        states = stack_states([s for s, _, _ in setups])
+        data = stack_data([d for _, d, _ in setups])
+        acc = {}        # scheme -> (C=1, S=2, R) stacked val_acc
+        for scheme in SCHEMES:
+            fl = fl_bench_config(scheme=scheme)
+            _, metrics = sweep_training(states, data, [fl], GameConfig(),
+                                        logits_fn, ROUNDS)
+            acc[scheme] = metrics["val_acc"]
+        results = {(iid, s): [float(x) for x in acc[s][0, i]]
+                   for s in SCHEMES for i, iid in enumerate((True, False))}
         rows = [[r] + [round(results[k][r], 4) for k in sorted(results)]
                 for r in range(ROUNDS)]
         save_csv(f"{fig}_schemes_{dataset}",
                  "round," + ",".join(f"{'iid' if i else 'noniid'}_{s}"
                                      for i, s in sorted(results)),
                  rows)
-        final = {k: max(v[-5:]) for k, v in results.items()}
-        iid_ok = (final[(True, "ideal")] >= final[(True, "proposed")] - 0.05
-                  and final[(True, "proposed")] >=
-                  min(final[(True, "wo_dt")], final[(True, "oma")]) - 0.02)
-        noniid_drop = final[(False, "proposed")] <= final[(True, "proposed")] + 0.02
+        # final accuracy per (split, scheme) off the stacked (C, S, R) grid:
+        # mean over the config axis, max of the last 5 rounds → [S]
+        final = {s: jnp.max(jnp.mean(a, axis=0)[:, -5:], axis=-1)
+                 for s, a in acc.items()}
+        iid_ok = bool(final["ideal"][0] >= final["proposed"][0] - 0.05
+                      and final["proposed"][0] >=
+                      min(float(final["wo_dt"][0]),
+                          float(final["oma"][0])) - 0.02)
+        noniid_drop = bool(final["proposed"][1] <= final["proposed"][0] + 0.02)
         out.append((f"{fig}_schemes_{dataset}", 0.0,
                     f"ordering_ok={iid_ok};noniid_drop={noniid_drop};"
                     f"mc_dt_energy_saving={mc_ok};"
-                    f"iid_proposed={final[(True,'proposed')]:.3f};"
-                    f"iid_ideal={final[(True,'ideal')]:.3f};"
-                    f"iid_wo_dt={final[(True,'wo_dt')]:.3f};"
-                    f"iid_oma={final[(True,'oma')]:.3f}"))
+                    f"iid_proposed={float(final['proposed'][0]):.3f};"
+                    f"iid_ideal={float(final['ideal'][0]):.3f};"
+                    f"iid_wo_dt={float(final['wo_dt'][0]):.3f};"
+                    f"iid_oma={float(final['oma'][0]):.3f}"))
     total_us = (time.perf_counter() - t0) * 1e6
     out = [(n, total_us / len(out), d) for n, _, d in out]
     return out

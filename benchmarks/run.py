@@ -6,6 +6,12 @@ micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
     PYTHONPATH=src python -m benchmarks.run --only equilibrium   # fast mode:
         # just the batched Stackelberg engine throughput (~seconds), writes
         # BENCH_equilibrium.json for trajectory tracking
+    PYTHONPATH=src python -m benchmarks.run --only training      # fast mode:
+        # trajectory + config-grid sweep tiers, writes BENCH_training.json
+    PYTHONPATH=src python -m benchmarks.run --only fig5          # one figure
+        # (fig5 / fig6 / fig78 each run + gate individually the same way)
+
+Unknown ``--only`` names are an error (they used to silently run nothing).
 """
 from __future__ import annotations
 
@@ -22,9 +28,16 @@ SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=",".join(SUITES))
+    ap.add_argument("--only", default=",".join(SUITES),
+                    help="comma-separated subset of: " + ",".join(SUITES))
     args = ap.parse_args()
-    wanted = set(args.only.split(","))
+    wanted = set(filter(None, args.only.split(",")))
+    unknown = wanted - set(SUITES)
+    if unknown:
+        ap.error(f"unknown suite(s) {','.join(sorted(unknown))}; "
+                 f"valid: {','.join(SUITES)}")
+    if not wanted:
+        ap.error(f"--only selected no suites; valid: {','.join(SUITES)}")
 
     print("name,us_per_call,derived")
     rows = []

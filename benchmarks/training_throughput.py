@@ -10,6 +10,16 @@
   * vmap  — ``batched_training``: S = 8 seeds × R rounds in one dispatch
     (rounds/sec counts S·R rounds), seed axis device-sharded.
 
+Plus the ``sweep`` section — the Fig. 5/6/7/8 grid workload: C = 6 config
+points (lr / ε / t_max vary numerically) × S = 4 seeds × R = 20 rounds as
+ONE ``sweep_training`` dispatch, measured against the two per-cell loops it
+replaces: the per-cell HOST loop (``run_training_eager`` per cell — the
+pre-scan figure path, subsampled because it is the slow baseline; the ≥4x
+acceptance target) and the per-cell scan loop (``run_training_scan`` per
+cell — the pre-sweep figure path, also the parity reference ≤ 1e-5).  A
+fig6-style ε-grid re-dispatch proves numeric knobs stay traced operands
+(zero retraces).
+
 Also records the recompile accounting (``TRACE_COUNTS['run_round']`` must
 grow by 1 per tier) and the S-seed parity check (vmap row s == sequential
 scan of seed s, ≤ 1e-5 rel — the acceptance criterion).
@@ -31,6 +41,8 @@ ROUNDS = 50
 SEEDS = 8
 HOST_ROUNDS = 10          # host-loop rounds actually timed (slow baseline)
 M, CAP, HIDDEN, NSEL = 12, 64, 32, 4
+SWEEP_C, SWEEP_S, SWEEP_R = 6, 4, 20   # the figure-grid sweep workload
+SWEEP_HOST_ROUNDS = 6     # per-cell host-loop rounds timed (extrapolated)
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_training.json")
 
@@ -57,6 +69,101 @@ def _setup(seed: int):
                     v_max=sample_v_max(ks[2], M, DTConfig()),
                     distances=sample_positions(ks[3], M), key=ks[4])
     return state, data, logits_fn
+
+
+def _sweep_section(per_seed, data, logits_fn):
+    """The Fig. 5/6/7/8 workload: a C×S grid of whole training runs as one
+    dispatch vs the two per-cell loops it replaces.  Returns the ``sweep``
+    sub-document of BENCH_training.json."""
+    import dataclasses
+    from repro.core.fl_round import (FLConfig, run_training_eager,
+                                     run_training_scan, stack_states,
+                                     sweep_training)
+    from repro.core.stackelberg import (GameConfig, TRACE_COUNTS,
+                                        sharding_layout)
+    fls = [FLConfig(n_selected=NSEL, local_steps=10, server_steps=10,
+                    lr=lr, epsilon=eps)
+           for lr, eps in ((0.1, 0.0), (0.08, 0.1), (0.12, 0.2),
+                           (0.1, 0.3), (0.06, 0.0), (0.1, 0.45))]
+    games = [dataclasses.replace(GameConfig(), t_max=t)
+             for t in (8.0, 9.0, 10.0, 11.0, 12.0, 10.5)]
+    states = stack_states([s for s, _, _ in per_seed[:SWEEP_S]])
+    grid_rounds = SWEEP_C * SWEEP_S * SWEEP_R
+
+    # per-cell HOST loop (the pre-scan figure path): one cell, subsampled —
+    # at ~1 round/sec the full grid would dominate the whole bench
+    run_training_eager(per_seed[0][0], data, fls[0], games[0], logits_fn, 1)
+    t0 = time.perf_counter()
+    run_training_eager(per_seed[0][0], data, fls[0], games[0], logits_fn,
+                       SWEEP_HOST_ROUNDS)
+    percell_host_rps = _rate(time.perf_counter() - t0, SWEEP_HOST_ROUNDS)
+
+    # per-cell scan loop (the pre-sweep figure path) — warm, and the
+    # parity reference for the swept grid
+    refs = {}
+    run_training_scan(per_seed[0][0], data, fls[0], games[0], logits_fn,
+                      SWEEP_R)                       # compile once
+    t0 = time.perf_counter()
+    for c in range(SWEEP_C):
+        for s in range(SWEEP_S):
+            _, out = run_training_scan(per_seed[s][0], data, fls[c],
+                                       games[c], logits_fn, SWEEP_R)
+            refs[(c, s)] = out["val_acc"]
+    jax.block_until_ready(refs[(SWEEP_C - 1, SWEEP_S - 1)])
+    percell_scan_rps = _rate(time.perf_counter() - t0, grid_rounds)
+
+    # the sweep: C×S×R in ONE dispatch, round body traced once
+    before = TRACE_COUNTS["run_round"]
+    t0 = time.perf_counter()
+    _, sw = sweep_training(states, data, fls, games, logits_fn, SWEEP_R)
+    jax.block_until_ready(sw["val_acc"])
+    sweep_cold_s = time.perf_counter() - t0
+    sweep_traces = TRACE_COUNTS["run_round"] - before
+    assert sweep_traces == 1, f"sweep traced run_round {sweep_traces}x"
+    sweep_rps = 0.0
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, sw = sweep_training(states, data, fls, games, logits_fn, SWEEP_R)
+        jax.block_until_ready(sw["val_acc"])
+        sweep_rps = max(sweep_rps, _rate(time.perf_counter() - t0,
+                                         grid_rounds))
+
+    # parity: sweep cell (c, s) == the per-cell scan of configs c, seed s
+    sweep_rel = 0.0
+    for (c, s), ref in refs.items():
+        sweep_rel = max(sweep_rel, float(jnp.max(
+            jnp.abs(sw["val_acc"][c, s] - ref)
+            / jnp.maximum(jnp.abs(ref), 1e-12))))
+
+    # fig6-style ε grid: same shapes, new numeric knob values — the
+    # re-dispatch must not retrace the round body
+    before = TRACE_COUNTS["run_round"]
+    eps_fls = [dataclasses.replace(fls[0], epsilon=e)
+               for e in (0.0, 0.15, 0.3, 0.45, 0.6, 0.75)]
+    _, _ = sweep_training(states, data, eps_fls, games[0], logits_fn,
+                          SWEEP_R)
+    eps_retraces = TRACE_COUNTS["run_round"] - before
+    assert eps_retraces == 0, "ε grid retraced the round body"
+
+    return {
+        "grid_c": SWEEP_C,
+        "grid_s": SWEEP_S,
+        "grid_rounds": SWEEP_R,
+        "percell_host_rounds_per_sec": round(percell_host_rps, 2),
+        "percell_host_measured_rounds": SWEEP_HOST_ROUNDS,
+        "percell_scan_rounds_per_sec": round(percell_scan_rps, 2),
+        "sweep_cold_wall_s": round(sweep_cold_s, 3),
+        "sweep_rounds_per_sec": round(sweep_rps, 2),
+        "speedup_sweep_vs_percell_host": round(sweep_rps / percell_host_rps,
+                                               2),
+        "speedup_sweep_vs_percell_scan": round(sweep_rps / percell_scan_rps,
+                                               2),
+        "run_round_traces_sweep": int(sweep_traces),
+        "eps_grid_retraces": int(eps_retraces),
+        "grid_axis_shards": sharding_layout(SWEEP_C * SWEEP_S),
+        "sweep_max_rel_vs_percell": sweep_rel,
+        "sweep_matches_percell_1e5": bool(sweep_rel <= 1e-5),
+    }
 
 
 def run():
@@ -122,6 +229,8 @@ def run():
             jnp.abs(bout["val_acc"][s] - ref["val_acc"]) /
             jnp.maximum(jnp.abs(ref["val_acc"]), 1e-12))))
 
+    sweep = _sweep_section(per_seed, data, logits_fn)
+
     doc = {
         "bench": "fl_training_trajectory_throughput",
         "rounds": ROUNDS,
@@ -144,6 +253,7 @@ def run():
         "devices": len(jax.devices()),
         "vmap_max_rel_vs_sequential": vmap_rel,
         "vmap_matches_sequential_1e5": bool(vmap_rel <= 1e-5),
+        "sweep": sweep,
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(doc, f, indent=2)
@@ -156,7 +266,13 @@ def run():
              f"scan_speedup={doc['speedup_scan_vs_host']}x;"
              f"target_5x_met={doc['speedup_scan_vs_host'] >= 5};"
              f"run_round_traces={scan_traces};"
-             f"vmap_matches_seq={doc['vmap_matches_sequential_1e5']}")]
+             f"vmap_matches_seq={doc['vmap_matches_sequential_1e5']};"
+             f"sweep_rps={sweep['sweep_rounds_per_sec']};"
+             f"sweep_vs_percell_host="
+             f"{sweep['speedup_sweep_vs_percell_host']}x;"
+             f"sweep_target_4x_met="
+             f"{sweep['speedup_sweep_vs_percell_host'] >= 4};"
+             f"sweep_matches_percell={sweep['sweep_matches_percell_1e5']}")]
 
 
 if __name__ == "__main__":

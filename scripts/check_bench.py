@@ -7,11 +7,13 @@ Tracked bench files and their gated metrics (higher is better):
       - ``results[].vmap_solves_per_sec``  — the K-axis Monte-Carlo path;
       - ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine.
   * ``BENCH_training.json``
-      - ``scan_rounds_per_sec``  — the scan-compiled FL trajectory;
-      - ``vmap_rounds_per_sec``  — the seed-vmapped trajectory sweep.
-    (The host-loop baseline tier is recorded but not gated — it is the
-    slow reference, and its host-side dispatch overhead is the noisiest
-    number in the file.)
+      - ``scan_rounds_per_sec``        — the scan-compiled FL trajectory;
+      - ``vmap_rounds_per_sec``        — the seed-vmapped trajectory sweep;
+      - ``sweep.sweep_rounds_per_sec`` — the C×S config-grid training
+        sweep (the Fig. 5/6/7/8 workload as one dispatch).
+    (The host-loop baseline tiers are recorded but not gated — they are
+    the slow references, and their host-side dispatch overhead is the
+    noisiest number in the file.)
 
 Exit code 0 = pass (or nothing to compare: missing file, no git baseline,
 or the baseline predates a metric).  Exit 1 = a gated metric regressed
@@ -48,6 +50,9 @@ def _training_metrics(doc) -> dict:
                        ("vmap_rounds_per_sec", "vmap")):
         if doc.get(key) is not None:
             out[label] = float(doc[key])
+    sweep = doc.get("sweep") or {}
+    if sweep.get("sweep_rounds_per_sec") is not None:
+        out["sweep"] = float(sweep["sweep_rounds_per_sec"])
     return out
 
 

@@ -123,6 +123,25 @@ assert TRACE_COUNTS["run_round"] - _before == 1, "scan retraced run_round"
 print(f"run_training_scan OK: R=3, 1 trace, "
       f"val_acc={float(_hist['val_acc'][-1]):.3f}")
 
+# config-axis training sweep: C=2 configs (ε/lr/t_max vary) × S=2 seeds ×
+# R=2 rounds in ONE dispatch — the Fig. 5/6/7/8 grid workload; the round
+# body must trace exactly once for the whole grid
+from repro.core.fl_round import stack_states, sweep_training
+
+_state_b = dataclasses.replace(_state, key=jax.random.PRNGKey(99))
+_states = stack_states([_state, _state_b])
+_fls = [FLConfig(n_selected=3, local_steps=4, server_steps=4, lr=lr,
+                 epsilon=eps) for lr, eps in ((0.1, 0.0), (0.08, 0.3))]
+_games = [dataclasses.replace(GameConfig(), t_max=t) for t in (9.0, 11.0)]
+_before = TRACE_COUNTS["run_round"]
+_fin_g, _grid = sweep_training(_states, _data, _fls, _games, _logits_fn,
+                               rounds=2)
+assert _grid["val_acc"].shape == (2, 2, 2)
+assert bool(jnp.all(jnp.isfinite(_grid["val_acc"])))
+assert TRACE_COUNTS["run_round"] - _before == 1, "sweep retraced run_round"
+print(f"sweep_training OK: C=2 x S=2 x R=2, 1 trace, "
+      f"val_acc={float(_grid['val_acc'][0, 0, -1]):.3f}")
+
 # benchmark regression gate (no-op when BENCH json / git baseline is absent)
 import pathlib, subprocess, sys
 _root = pathlib.Path(__file__).resolve().parents[1]

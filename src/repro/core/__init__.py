@@ -5,14 +5,15 @@ from .channel import (BANDWIDTH_HZ, noise_power, sample_channel_gains,
 from .dinkelbach import dinkelbach_power, successive_power
 from .fl_round import (FLConfig, FLState, batched_training, run_round,
                        run_training, run_training_eager, run_training_scan,
-                       stack_states)
+                       stack_fl_ops, stack_states, sweep_training)
 from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
                          init_reputation, select_clients)
 from .reputation import reputation as reputation_score
 from . import reputation  # keep the submodule accessible (not the function)
 from .fl_round import allocate, allocate_batched, sweep_allocation
-from .stackelberg import (Allocation, GameConfig, GamePhysics,
-                          batched_equilibrium, batched_oma_allocation,
+from .stackelberg import (TRACE_COUNTS, Allocation, GameConfig, GamePhysics,
+                          reset_trace_counts)
+from .stackelberg import (batched_equilibrium, batched_oma_allocation,
                           batched_oma_tdma_allocation,
                           batched_random_allocation, batched_wo_dt_allocation,
                           equilibrium, equilibrium_eager, follower_alpha,
@@ -27,7 +28,8 @@ __all__ = [
     "BANDWIDTH_HZ", "noise_power", "sample_channel_gains", "sample_positions",
     "sample_round_channels", "dinkelbach_power", "successive_power",
     "FLConfig", "FLState", "run_round", "run_training", "run_training_eager",
-    "run_training_scan", "batched_training", "stack_states",
+    "run_training_scan", "batched_training", "sweep_training", "stack_states",
+    "stack_fl_ops", "TRACE_COUNTS", "reset_trace_counts",
     "BENCHMARK_WEIGHTS",
     "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
     "reputation_score", "select_clients", "Allocation", "GameConfig",

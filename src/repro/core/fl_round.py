@@ -34,6 +34,13 @@ Execution tiers — the whole R-round trajectory is ONE compiled program:
   * ``batched_training``   — ``vmap`` of the scan over a leading seed axis
     (optionally with per-seed data, e.g. a poisoned-fraction axis): an
     S-seed × R-round sweep is one dispatch, seed axis device-sharded.
+  * ``sweep_training``     — a leading CONFIG axis on top of the seed axis:
+    C (``FLConfig``, ``GameConfig``) points × S seeds × R rounds as ONE
+    dispatch of one executable.  The C points' numeric knobs are stacked
+    into ``[C]``-leaved pytrees (``stack_physics`` / ``stack_fl_ops``), the
+    C×S grid is flattened and device-sharded, and a whole Fig. 5/6/7/8-style
+    figure grid traces the round body exactly once per (scheme, use_roni,
+    shape) — scheme/use_roni/shapes are the only compile keys.
   * ``run_training``       — compat shim over ``run_training_scan``: same
     list-of-dicts history (python scalars) as the legacy host loop.
   * ``run_round`` / ``run_training_eager`` — the legacy host-side path
@@ -46,7 +53,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 from functools import partial
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,7 +69,7 @@ from .stackelberg import (TRACE_COUNTS, Allocation, GameConfig,
                           batched_oma_allocation, batched_oma_tdma_allocation,
                           batched_random_allocation, batched_wo_dt_allocation,
                           equilibrium, oma_allocation, oma_tdma_allocation,
-                          random_allocation, sweep_equilibrium,
+                          random_allocation, stack_physics, sweep_equilibrium,
                           sweep_oma_allocation, sweep_oma_tdma_allocation,
                           sweep_random_allocation, sweep_wo_dt_allocation,
                           wo_dt_allocation)
@@ -496,6 +503,36 @@ def stack_states(states) -> FLState:
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
 
 
+def stack_fl_ops(fls: Sequence[FLConfig], dtype=jnp.float32) -> Dict:
+    """Stack C ``FLConfig`` points into one traced-ops dict with a leading
+    [C] axis on every numeric knob ([C, 3] for the selection weights) — the
+    config axis of ``sweep_training``, mirroring ``stack_physics``.
+
+    All points must agree on the discrete algorithm choices (scheme,
+    use_roni, n_selected, local/server steps): those are static compile
+    keys, so a grid that varies them is several sweeps, not one."""
+    fls = list(fls)
+    statics = {(f.scheme, f.use_roni, f.n_selected, f.local_steps,
+                f.server_steps) for f in fls}
+    if len(statics) != 1:
+        raise ValueError(
+            "sweep config points mix static algorithm keys "
+            f"{sorted(statics)}; scheme/use_roni/n_selected/steps are "
+            "compile keys — sweep each combination separately")
+    per_point = [_fl_ops(f, dtype) for f in fls]
+    return {k: jnp.stack([ops[k] for ops in per_point])
+            for k in per_point[0]}
+
+
+def _shard_tree(tree, size: int):
+    """``_shard_axis`` over every leaf of a pytree (leading batch/grid
+    axis) — the shared sharding recipe of ``batched_training`` (seed axis)
+    and ``sweep_training`` (flattened C×S grid axis)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return jax.tree_util.tree_unflatten(
+        treedef, _shard_axis(tuple(leaves), axis=0, size=size))
+
+
 def batched_training(states: FLState, data: FedData, fl: FLConfig,
                      game: GameConfig, logits_fn: Callable, rounds: int):
     """S independent R-round trajectories in ONE XLA dispatch: ``vmap`` of
@@ -515,13 +552,102 @@ def batched_training(states: FLState, data: FedData, fl: FLConfig,
     states, phys, ops = _prep(states, fl, game)
     data_batched = data.x.ndim == 4
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
-    leaves, treedef = jax.tree_util.tree_flatten(states)
-    states = jax.tree_util.tree_unflatten(
-        treedef, _shard_axis(tuple(leaves), axis=0, size=s))
+    states = _shard_tree(states, s)
     if data_batched:
-        dleaves, dtreedef = jax.tree_util.tree_flatten(data)
-        data = jax.tree_util.tree_unflatten(
-            dtreedef, _shard_axis(tuple(dleaves), axis=0, size=s))
+        data = _shard_tree(data, s)
     return _batched_training_jit(phys, states, data, ops, rounds=rounds,
                                  data_batched=data_batched,
                                  **_static_kwargs(fl, game, logits_fn))
+
+
+@partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
+def _sweep_training_jit(phys, states, data, ops, *, rounds, data_batched,
+                        **static):
+    """vmap of the scanned trajectory over the FLATTENED C×S grid axis:
+    physics and FL ops are mapped per grid cell (unlike the seed-only vmap,
+    which broadcasts them), so one executable covers the whole config grid."""
+    TRACE_COUNTS["sweep_training"] += 1
+
+    def scan_cell(ph, op, st, dt):
+        def body(carry, _):
+            TRACE_COUNTS["run_round"] += 1
+            return _round_body(carry, dt, ph, op, **static)
+
+        return jax.lax.scan(body, st, None, length=rounds)
+
+    if data_batched:
+        return jax.vmap(scan_cell)(phys, ops, states, data)
+    return jax.vmap(lambda ph, op, st: scan_cell(ph, op, st, data))(
+        phys, ops, states)
+
+
+def sweep_training(states: FLState, data: FedData, fls, games,
+                   logits_fn: Callable, rounds: int):
+    """A whole config-grid of training runs — C (``FLConfig``,
+    ``GameConfig``) points × S seeds × R rounds — as ONE XLA dispatch of
+    one executable (the Fig. 5/6/7/8 workload).
+
+    fls    : C ``FLConfig`` points (or a single one, broadcast to match
+             ``games``).  Every numeric knob (lr, ε, RONI threshold,
+             selection weights, samples_per_unit) rides the config axis as
+             a traced operand; the discrete keys (scheme, use_roni,
+             n_selected, steps) must agree across points — they are the
+             only compile keys.
+    games  : C ``GameConfig`` points (or a single one); their eleven
+             physics floats are stacked into a [C]-leaved ``GamePhysics``.
+    states : ``FLState`` with a leading S seed axis (``stack_states``),
+             shared across the config axis.
+    data   : shared ``FedData`` (``x.ndim == 3``) or one with a leading S
+             axis (``x.ndim == 4``) for per-seed datasets — e.g. fig5's
+             attacker-fraction axis, where seed s was poisoned at ratio
+             r_s; a per-seed dataset is shared across the config axis.
+
+    The C×S grid is flattened and device-sharded through the same
+    ``sharding_layout``/``NamedSharding`` machinery as the K axis of the
+    equilibrium sweeps (single-device no-op).  Returns
+    ``(final_states, metrics)`` with a leading ``(C, S)`` prefix on every
+    leaf — cell (c, s) equals ``run_training_scan`` with configs c on seed
+    s alone (pure batching).
+    """
+    fls = [fls] if isinstance(fls, FLConfig) else list(fls)
+    games = [games] if isinstance(games, GameConfig) else list(games)
+    if len(fls) == 1 and len(games) > 1:
+        fls = fls * len(games)
+    if len(games) == 1 and len(fls) > 1:
+        games = games * len(fls)
+    if len(fls) != len(games):
+        raise ValueError(f"config axis mismatch: {len(fls)} FLConfig vs "
+                         f"{len(games)} GameConfig points")
+    c = len(fls)
+    states = _canon_state(states)
+    dtype = jnp.result_type(jnp.asarray(states.distances))
+    phys = stack_physics(games, dtype)            # [C] leaves
+    ops = stack_fl_ops(fls, dtype)                # [C] / [C, 3] leaves
+    s = jax.tree_util.tree_leaves(states)[0].shape[0]
+    g = c * s
+
+    # flatten the C×S grid: config points repeat per seed, seeds tile per
+    # config — row c*S+s of the grid is (config c, seed s)
+    rep_cfg = lambda x: jnp.repeat(x, s, axis=0)
+    tile_seed = lambda x: jnp.broadcast_to(
+        x[None], (c,) + x.shape).reshape((g,) + x.shape[1:])
+    phys = jax.tree_util.tree_map(rep_cfg, phys)
+    ops = {k: rep_cfg(v) for k, v in ops.items()}
+    states = jax.tree_util.tree_map(tile_seed, states)
+    data_batched = data.x.ndim == 4
+    if data_batched:
+        data = jax.tree_util.tree_map(tile_seed, data)
+
+    # device-shard the flattened grid axis (single-device no-op)
+    phys = _shard_tree(phys, g)
+    ops = _shard_tree(ops, g)
+    states = _shard_tree(states, g)
+    if data_batched:
+        data = _shard_tree(data, g)
+
+    final, metrics = _sweep_training_jit(
+        phys, states, data, ops, rounds=rounds, data_batched=data_batched,
+        **_static_kwargs(fls[0], games[0], logits_fn))
+    unflat = lambda x: x.reshape((c, s) + x.shape[1:])
+    return (jax.tree_util.tree_map(unflat, final),
+            {k: unflat(v) for k, v in metrics.items()})

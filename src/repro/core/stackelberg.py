@@ -69,6 +69,16 @@ TAU = 2e-28  # effective capacitance coefficient (Table I / [22])
 TRACE_COUNTS: collections.Counter = collections.Counter()
 
 
+def reset_trace_counts() -> None:
+    """Zero every trace counter (the jit caches themselves are untouched).
+
+    Test isolation: ``TRACE_COUNTS`` deltas asserted in one test must not
+    depend on which other tests ran first — an autouse fixture calls this
+    before each test, so every assertion starts from a clean counter and
+    snapshots its own ``before`` value."""
+    TRACE_COUNTS.clear()
+
+
 @dataclass(frozen=True)
 class GameConfig:
     """Table I simulation parameters (plain floats, hashable).

@@ -1,0 +1,24 @@
+"""Shared test fixtures.
+
+Trace-counter isolation: many tests assert ``TRACE_COUNTS`` deltas to
+prove compile sharing (test_sweep_engine.py, test_training_scan.py,
+test_training_sweep.py).  The counters are module-level state, so without
+a reset they accumulate across tests and an assertion could pass or fail
+depending on execution order.  The autouse fixture zeroes them before
+every test; each test still snapshots its own ``before`` value, and the
+jit caches themselves are untouched (tests that need a genuinely cold
+cache use shapes no other test compiles)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest
+
+from repro.core.stackelberg import reset_trace_counts
+
+
+@pytest.fixture(autouse=True)
+def _fresh_trace_counts():
+    reset_trace_counts()
+    yield

@@ -1,0 +1,258 @@
+"""Config-axis training sweep tests (ISSUE 4 tentpole).
+
+Three properties of ``sweep_training``:
+
+  * parity — cell (c, s) of the swept C×S grid equals ``batched_training``
+    with configs c on the same seeds (pure batching, ≤ 1e-5 rel on every
+    stacked metric), for proposed + ideal schemes, with and without RONI,
+    and with a per-seed data axis (fig5's attacker-fraction layout);
+  * compile behavior — a C-point config grid traces the round body exactly
+    ONCE per (scheme, use_roni, shape), and changing any numeric knob
+    (lr, ε, RONI threshold, physics floats) across config points must not
+    retrace — only scheme/use_roni/shapes are compile keys;
+  * grid sharding — the flattened C×S axis device-shards through the same
+    ``sharding_layout``/``NamedSharding`` machinery as the equilibrium
+    sweeps (forced-4-device subprocess; single-device no-op elsewhere).
+
+Shapes here are deliberately unusual (M=9 pool, cap=36, hidden=28) so
+earlier tests cannot have pre-warmed the jit cache and trace deltas are
+real.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.channel import sample_positions
+from repro.core.digital_twin import DTConfig, sample_v_max
+from repro.core.fl_round import (FLConfig, FLState, batched_training,
+                                 stack_fl_ops, stack_states, sweep_training)
+from repro.core.reputation import init_reputation
+from repro.core.stackelberg import GameConfig, TRACE_COUNTS
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_MNIST
+
+M, CAP, HID, NSEL = 9, 36, 28, 3
+REL = 1e-5
+SCALAR_METRICS = ("val_acc", "latency", "energy", "total_cost", "mean_v")
+INT_METRICS = ("round", "n_excluded_roni", "n_stragglers",
+               "n_poisoned_selected")
+
+
+def _setup(seed=0, poison=0.25, m=M, cap=CAP, hidden=HID):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    data = make_federated_data(ks[0], SYNTHETIC_MNIST, m=m, cap=cap,
+                               poison_ratio=poison)
+    from repro.models.classifier import make_classifier
+    params, logits_fn = make_classifier("mlp", ks[1], in_dim=784,
+                                        hidden=hidden)
+    state = FLState(params=params, rep=init_reputation(m),
+                    v_max=sample_v_max(ks[2], m, DTConfig()),
+                    distances=sample_positions(ks[3], m), key=ks[4])
+    return state, data, logits_fn
+
+
+def _fl(**kw):
+    kw.setdefault("n_selected", NSEL)
+    kw.setdefault("local_steps", 4)
+    kw.setdefault("server_steps", 4)
+    kw.setdefault("lr", 0.1)
+    return FLConfig(**kw)
+
+
+def _grid(scheme, use_roni, c=2):
+    fls = [_fl(scheme=scheme, use_roni=use_roni, lr=0.1 - 0.02 * i,
+               epsilon=0.15 * i, roni_threshold=0.02 + 0.01 * i)
+           for i in range(c)]
+    games = [dataclasses.replace(GameConfig(), t_max=10.0 - i)
+             for i in range(c)]
+    return fls, games
+
+
+def _assert_cell_parity(sw, ref, c):
+    """Sweep row c against a ``batched_training`` reference (S, R, ...)."""
+    for k in SCALAR_METRICS:
+        rel = float(jnp.max(jnp.abs(sw[k][c] - ref[k])
+                            / jnp.maximum(jnp.abs(ref[k]), 1e-12)))
+        assert rel < REL, (c, k, rel)
+    for k in INT_METRICS:
+        assert sw[k][c].tolist() == ref[k].tolist(), (c, k)
+    assert sw["selected"][c].tolist() == ref["selected"].tolist(), c
+
+
+@pytest.mark.parametrize("scheme,use_roni", [("proposed", True),
+                                             ("proposed", False),
+                                             ("ideal", True),
+                                             ("ideal", False)])
+def test_sweep_matches_sequential_batched(scheme, use_roni):
+    """Cell (c, s) of the C=2 × S=2 sweep equals ``batched_training`` at
+    configs c on the same stacked seeds — the sweep's config axis is pure
+    batching on top of the seed axis."""
+    per_seed = [_setup(seed=s) for s in range(2)]
+    states = stack_states([s for s, _, _ in per_seed])
+    data, logits_fn = per_seed[0][1], per_seed[0][2]
+    fls, games = _grid(scheme, use_roni)
+    fstate, sw = sweep_training(states, data, fls, games, logits_fn,
+                                rounds=3)
+    assert sw["val_acc"].shape == (2, 2, 3)
+    assert sw["selected"].shape == (2, 2, 3, NSEL)
+    for c in range(2):
+        bstate, ref = batched_training(states, data, fls[c], games[c],
+                                       logits_fn, rounds=3)
+        _assert_cell_parity(sw, ref, c)
+        for a, b in zip(jax.tree_util.tree_leaves(
+                jax.tree_util.tree_map(lambda x: x[c], fstate)),
+                jax.tree_util.tree_leaves(bstate)):
+            rel = float(jnp.max(jnp.abs(a - b))
+                        / max(float(jnp.max(jnp.abs(b))), 1e-12))
+            assert rel < REL, (scheme, use_roni, c)
+
+
+def test_sweep_per_seed_data_axis():
+    """fig5's layout: the attacker-fraction axis rides the per-seed DATA
+    axis while ε rides the config axis — both match per-config
+    ``batched_training`` with the same stacked data."""
+    a = _setup(seed=3, poison=0.0)
+    b = _setup(seed=4, poison=0.4)
+    states = stack_states([a[0], b[0]])
+    data = jax.tree_util.tree_map(lambda x, y: jnp.stack([x, y]), a[1], b[1])
+    fls = [_fl(epsilon=e) for e in (0.0, 0.3)]
+    game = GameConfig()
+    _, sw = sweep_training(states, data, fls, game, logits_fn=a[2], rounds=3)
+    assert sw["val_acc"].shape == (2, 2, 3)
+    for c in range(2):
+        _, ref = batched_training(states, data, fls[c], game, a[2], rounds=3)
+        _assert_cell_parity(sw, ref, c)
+    # the poisoned-seed rows actually saw poisoned clients, clean rows none
+    assert int(jnp.sum(sw["n_poisoned_selected"][:, 0])) == 0
+    assert int(jnp.sum(sw["n_poisoned_selected"][:, 1])) >= 1
+
+
+def test_sweep_c3_grid_traces_once_and_numeric_knobs_dont_retrace():
+    """A C=3 config grid traces the round body exactly once, re-dispatch
+    reuses it, and a grid with entirely different numeric knob VALUES
+    (lr, ε, RONI threshold, t_max, bandwidth — same shapes) must hit the
+    same executable: only (scheme, use_roni, shape) are compile keys."""
+    state, data, logits_fn = _setup(seed=5, m=10, hidden=20, cap=32)
+    states = stack_states([state])
+    fls, games = _grid("oma", True, c=3)
+    before = TRACE_COUNTS["run_round"]
+    _, sw = sweep_training(states, data, fls, games, logits_fn, rounds=4)
+    assert sw["val_acc"].shape == (3, 1, 4)
+    assert TRACE_COUNTS["run_round"] - before == 1
+    assert TRACE_COUNTS["sweep_training"] == 1
+
+    sweep_training(states, data, fls, games, logits_fn, rounds=4)
+    assert TRACE_COUNTS["run_round"] - before == 1, "re-dispatch retraced"
+
+    fls2 = [dataclasses.replace(f, lr=0.21, epsilon=0.05,
+                                roni_threshold=0.07) for f in fls]
+    games2 = [dataclasses.replace(g, t_max=g.t_max + 1.5, bandwidth=2e6)
+              for g in games]
+    sweep_training(states, data, fls2, games2, logits_fn, rounds=4)
+    assert TRACE_COUNTS["run_round"] - before == 1, \
+        "numeric FL/game knobs must be traced operands, not compile keys"
+
+
+def test_stack_fl_ops_layout_and_static_guard():
+    fls = [_fl(lr=0.1 * (i + 1), epsilon=0.1 * i) for i in range(3)]
+    ops = stack_fl_ops(fls)
+    assert ops["lr"].shape == (3,)
+    assert ops["weights"].shape == (3, 3)
+    assert jnp.allclose(ops["lr"], jnp.asarray([0.1, 0.2, 0.3]))
+    assert jnp.allclose(ops["epsilon"], jnp.asarray([0.0, 0.1, 0.2]))
+    with pytest.raises(ValueError, match="static"):
+        stack_fl_ops([_fl(), _fl(use_roni=False)])
+    with pytest.raises(ValueError, match="static"):
+        stack_fl_ops([_fl(), _fl(scheme="oma")])
+    with pytest.raises(ValueError, match="static"):
+        stack_fl_ops([_fl(), _fl(local_steps=9)])
+
+
+def test_sweep_config_axis_broadcast_and_mismatch():
+    """A single FLConfig broadcasts across C GameConfigs (and vice versa);
+    unequal explicit lengths are an error."""
+    state, data, logits_fn = _setup(seed=6, m=10, hidden=20, cap=32)
+    states = stack_states([state])
+    games = [dataclasses.replace(GameConfig(), t_max=t) for t in (9., 11.)]
+    _, sw = sweep_training(states, data, _fl(scheme="oma"), games,
+                           logits_fn, rounds=2)
+    assert sw["val_acc"].shape == (2, 1, 2)
+    _, sw = sweep_training(states, data,
+                           [_fl(scheme="oma", epsilon=e) for e in (0., .3)],
+                           GameConfig(), logits_fn, rounds=2)
+    assert sw["val_acc"].shape == (2, 1, 2)
+    with pytest.raises(ValueError, match="config axis"):
+        sweep_training(states, data, [_fl()] * 3, games, logits_fn, 2)
+
+
+# ---------------------------------------------------------------------------
+# device sharding of the flattened C×S grid
+# ---------------------------------------------------------------------------
+_SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=4")
+import jax, jax.numpy as jnp
+from repro.core.channel import sample_positions
+from repro.core.digital_twin import DTConfig, sample_v_max
+from repro.core.fl_round import (FLConfig, FLState, _shard_tree,
+                                 run_training_scan, stack_states,
+                                 sweep_training)
+from repro.core.reputation import init_reputation
+from repro.core.stackelberg import GameConfig, sharding_layout
+from repro.data.federated import make_federated_data
+from repro.data.synthetic import SYNTHETIC_MNIST
+from repro.models.classifier import make_classifier
+
+assert len(jax.devices()) == 4, jax.devices()
+assert sharding_layout(4) == 4
+sharded = _shard_tree({"a": jnp.arange(8.0).reshape(4, 2)}, 4)["a"]
+assert len(sharded.sharding.device_set) == 4, sharded.sharding
+
+def setup(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    data = make_federated_data(ks[0], SYNTHETIC_MNIST, m=8, cap=16,
+                               poison_ratio=0.25)
+    params, logits_fn = make_classifier("mlp", ks[1], in_dim=784, hidden=8)
+    st = FLState(params=params, rep=init_reputation(8),
+                 v_max=sample_v_max(ks[2], 8, DTConfig()),
+                 distances=sample_positions(ks[3], 8), key=ks[4])
+    return st, data, logits_fn
+
+cells = [setup(s) for s in range(2)]
+states = stack_states([c[0] for c in cells])
+data, logits_fn = cells[0][1], cells[0][2]
+fls = [FLConfig(n_selected=2, local_steps=2, server_steps=2, lr=0.1,
+                epsilon=e) for e in (0.0, 0.3)]
+game = GameConfig()
+# C=2 x S=2 -> flattened grid of 4 cells over 4 forced host devices
+_, sw = sweep_training(states, data, fls, game, logits_fn, rounds=2)
+assert sw["val_acc"].shape == (2, 2, 2)
+for c in range(2):
+    for s in range(2):
+        _, ref = run_training_scan(cells[s][0], data, fls[c], game,
+                                   logits_fn, 2)
+        rel = float(jnp.max(jnp.abs(sw["val_acc"][c, s] - ref["val_acc"])))
+        assert rel < 1e-5, (c, s, rel)
+print("SWEEP_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_grid_shards_across_forced_host_devices():
+    """With 4 forced host devices the flattened C×S = 4 grid splits 4-ways
+    and every sharded cell still matches its own sequential scan
+    (subprocess: the device count is fixed at jax import)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=420)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "SWEEP_SHARDED_OK" in proc.stdout
