@@ -7,12 +7,14 @@ execution paths at K ∈ {1, 64, 1024} independent 5-client realizations:
     program, still dispatched per instance;
   * vmap   — ``batched_equilibrium``: all K realizations in ONE XLA call;
 
-plus an ``n_scaling`` section profiling the batched engine across client
-counts N ∈ {5, 10, 20, 40, 64}: the reverse ``lax.scan`` in
-``successive_power`` (interference prefix-sum + per-client Dinkelbach
-chain) is inherently sequential in N, so its share of the solve grows with
-N — this section is the data grounding the ROADMAP's "Pallas kernel for
-the interference prefix-sum" decision;
+plus an ``n_scaling`` section in two parts: the historical small-N rows
+(N ∈ {5, 10, 20, 40, 64}) profiling the reverse ``lax.scan`` in
+``successive_power`` (interference suffix-sum + per-client Dinkelbach
+chain, inherently sequential in N), and large-N head-to-head rows
+(N ∈ {64, 128, 256, 512, 1024}) comparing that sequential chain against
+the blocked Jacobi fixed-point engine (``sic_mode="blocked"``,
+``repro.core.sic``) and the Pallas suffix-kernel interpret path — the
+data behind the ROADMAP's sequential-vs-blocked crossover claim;
 
 plus a ``sweep`` section timing the fig9-style config grid (10 points ×
 K=256 draws):
@@ -50,6 +52,12 @@ N_SCALING = (5, 10, 20, 40, 64)   # client counts for the N-scaling profile
 N_SCALING_K = 48   # draws per point — NOT one of K_VALUES, so the (N=5, K)
                    # shape is a fresh compile key and compile_wall_s is a
                    # real measurement (K=64 was pre-warmed by the K sweep)
+# large-N rows: sequential reverse-scan vs blocked Jacobi sweeps (ISSUE 5);
+# K shrinks with N to keep the sequential baseline's wall time sane
+N_SCALING_LARGE = ((64, 48), (128, 32), (256, 16), (512, 8), (1024, 8))
+N_INTERPRET = (64, 128)  # Pallas-interpret validation path timed only at
+                         # small N (the interpreter emulates the kernel
+                         # op-by-op — a correctness tier, not a perf tier)
 SWEEP_TMAX = (4.0, 6.0, 8.0, 10.0, 12.0)
 SWEEP_MBITS = (0.5e6, 2.0e6)     # × SWEEP_TMAX → the 10-point fig9 grid
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -177,6 +185,84 @@ def _n_scaling_section():
     return rows
 
 
+def _time_batched(cfg, h2, d, vmax, reps: int = 3):
+    """(cold_s, warm_s) for one ``batched_equilibrium`` workload."""
+    from repro.core.stackelberg import batched_equilibrium
+    t0 = time.perf_counter()
+    out = batched_equilibrium(cfg, h2, d, vmax)
+    jax.block_until_ready(out.energy)
+    cold_s = time.perf_counter() - t0
+    warm_s = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = batched_equilibrium(cfg, h2, d, vmax)
+        jax.block_until_ready(out.energy)
+        warm_s = min(warm_s, time.perf_counter() - t0)
+    assert bool(jnp.all(jnp.isfinite(out.energy)))
+    return cold_s, warm_s, out
+
+
+def _n_scaling_large_section():
+    """Head-to-head at N ∈ {64 … 1024}: the sequential reverse-scan SIC
+    chain vs the blocked Jacobi fixed-point engine (``sic_mode="blocked"``,
+    same fixed point — parity asserted here too), plus the Pallas
+    suffix-kernel interpret path at small N as a validation tier.
+
+    Two workloads per row: the K-draw Monte-Carlo batch (throughput — the
+    vmapped sequential scan amortizes its N serial steps across the K
+    lanes, so it holds on longer here) and the single-instance K=1 solve
+    (latency — nothing amortizes the serial chain, the regime where the
+    blocked engine wins on this container).  This is the measurement
+    behind the ROADMAP's crossover discussion; ``scripts/check_bench.py``
+    gates the blocked rates at −20%."""
+    from repro.core.stackelberg import GameConfig
+    cfg_seq = GameConfig()
+    cfg_blk = dataclasses.replace(cfg_seq, sic_mode="blocked")
+    rows = []
+    for n, k in N_SCALING_LARGE:
+        key = jax.random.PRNGKey(9000 + n)
+        h2 = mc_channel_draws(key, k, n)
+        d = 100.0 + 200.0 * jax.random.uniform(jax.random.fold_in(key, 1),
+                                               (k, n))
+        vmax = 0.3 + 0.5 * jax.random.uniform(jax.random.fold_in(key, 2),
+                                              (k, n))
+        _, seq_s, seq_out = _time_batched(cfg_seq, h2, d, vmax)
+        blk_cold, blk_s, blk_out = _time_batched(cfg_blk, h2, d, vmax)
+        rel = float(jnp.max(jnp.abs(blk_out.energy - seq_out.energy)
+                            / jnp.maximum(jnp.abs(seq_out.energy), 1e-12)))
+        # ≤1e-5 parity holds at the successive_power level (test_sic.py);
+        # the full Alg-2 alternation's energy-change stopping rule can
+        # amplify ~1e-7 solver residue into a DIFFERENT valid stopping
+        # iterate on infeasible draws (both paths keep their best-iterate
+        # safeguard), so the equilibrium-level drift bound is looser
+        assert rel < 1e-3, f"blocked/sequential energy drift {rel} at N={n}"
+        # single-instance latency: K=1 slices of the same draws
+        _, seq1_s, _ = _time_batched(cfg_seq, h2[:1], d[:1], vmax[:1],
+                                     reps=5)
+        _, blk1_s, _ = _time_batched(cfg_blk, h2[:1], d[:1], vmax[:1],
+                                     reps=5)
+        row = {
+            "N": n,
+            "K": k,
+            "seq_solves_per_sec": round(_rate(seq_s, k), 2),
+            "blocked_solves_per_sec": round(_rate(blk_s, k), 2),
+            "blocked_compile_wall_s": round(blk_cold - blk_s, 3),
+            "speedup_blocked_vs_seq": round(seq_s / blk_s, 2),
+            "seq_k1_latency_ms": round(seq1_s * 1e3, 3),
+            "blocked_k1_latency_ms": round(blk1_s * 1e3, 3),
+            "speedup_blocked_vs_seq_k1": round(seq1_s / blk1_s, 2),
+            "energy_rel_err": float(f"{rel:.2e}"),
+        }
+        if n in N_INTERPRET:
+            cfg_int = dataclasses.replace(cfg_seq,
+                                          sic_mode="blocked_interpret")
+            _, int_s, _ = _time_batched(cfg_int, h2, d, vmax, reps=1)
+            row["blocked_interpret_solves_per_sec"] = round(_rate(int_s, k),
+                                                            2)
+        rows.append(row)
+    return rows
+
+
 def run():
     from repro.core.stackelberg import (GameConfig, batched_equilibrium,
                                         equilibrium, equilibrium_eager)
@@ -241,7 +327,9 @@ def run():
         })
 
     sweep = _sweep_section()
-    n_scaling = _n_scaling_section()
+    # one n_scaling section: the historical small-N sequential profile rows
+    # followed by the large-N sequential-vs-blocked head-to-head rows
+    n_scaling = _n_scaling_section() + _n_scaling_large_section()
 
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "stackelberg_equilibrium_throughput",
@@ -250,6 +338,7 @@ def run():
 
     elapsed_us = (time.perf_counter() - t_start) * 1e6
     big = results[-1]
+    big_n = n_scaling[-1]     # the N=1024 sequential-vs-blocked row
     return [("equilibrium_throughput", elapsed_us,
              f"K={big['K']};legacy_sps={big['legacy_solves_per_sec']};"
              f"jit_sps={big['jit_solves_per_sec']};"
@@ -259,8 +348,11 @@ def run():
              f"sweep_recompiles={sweep['sweep_recompiles']};"
              f"sweep_vs_static={sweep['speedup_sweep_cold_vs_static']}x;"
              f"sweep_5x_met={sweep['speedup_sweep_cold_vs_static'] >= 5};"
-             f"nscale_cps_n5={n_scaling[0]['client_solves_per_sec']};"
-             f"nscale_cps_n64={n_scaling[-1]['client_solves_per_sec']}")]
+             f"blocked_n{big_n['N']}_sps={big_n['blocked_solves_per_sec']};"
+             f"blocked_vs_seq_n{big_n['N']}="
+             f"{big_n['speedup_blocked_vs_seq']}x;"
+             f"blocked_vs_seq_n{big_n['N']}_k1="
+             f"{big_n['speedup_blocked_vs_seq_k1']}x")]
 
 
 if __name__ == "__main__":

@@ -5,7 +5,9 @@ throughput regressed more than TOLERANCE vs the committed baseline
 Tracked bench files and their gated metrics (higher is better):
   * ``BENCH_equilibrium.json``
       - ``results[].vmap_solves_per_sec``  — the K-axis Monte-Carlo path;
-      - ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine.
+      - ``sweep.sweep_solves_per_sec``     — the config-grid sweep engine;
+      - ``n_scaling[].blocked_solves_per_sec`` — the large-N blocked SIC
+        engine rows (``sic_mode="blocked"``, one gate per N).
   * ``BENCH_training.json``
       - ``scan_rounds_per_sec``        — the scan-compiled FL trajectory;
       - ``vmap_rounds_per_sec``        — the seed-vmapped trajectory sweep;
@@ -41,6 +43,10 @@ def _equilibrium_metrics(doc) -> dict:
     sweep = doc.get("sweep") or {}
     if sweep.get("sweep_solves_per_sec") is not None:
         out["sweep"] = float(sweep["sweep_solves_per_sec"])
+    for row in doc.get("n_scaling", []):
+        val = row.get("blocked_solves_per_sec")
+        if val is not None:
+            out[f"nscale_blocked_N{row.get('N')}"] = float(val)
     return out
 
 

@@ -89,6 +89,22 @@ assert sw.energy.shape == (len(cfgs), K)
 assert TRACE_COUNTS["sweep_equilibrium"] - before == 1, "sweep retraced"
 print(f"sweep equilibrium OK: {len(cfgs)} configs x K={K}, 1 trace")
 
+# large-N blocked SIC engine: N=128 Jacobi fixed-point sweeps must land on
+# the same equilibrium as the sequential reverse-scan chain (ISSUE 5)
+h2_128 = sample_sic_channel_batch(jax.random.PRNGKey(21), 4, 128)
+d_128, vm_128 = jnp.full((128,), 200.0), jnp.full((128,), 0.5)
+a_seq = batched_equilibrium(GameConfig(), h2_128, d_128, vm_128)
+a_blk = batched_equilibrium(GameConfig(sic_mode="blocked"), h2_128, d_128,
+                            vm_128)
+_rel = lambda a, b: float(jnp.max(jnp.abs(a - b) /
+                                  jnp.maximum(jnp.abs(b), 1e-12)))
+# equilibrium-LEVEL bound is 1e-3, not the solver-level 1e-5: the Alg-2
+# energy-change stopping rule can pick a different valid best-iterate from
+# ~1e-7 solver residue on infeasible draws (see equilibrium_throughput.py)
+assert _rel(a_blk.energy, a_seq.energy) < 1e-3, "blocked energy drift"
+assert _rel(a_blk.p, a_seq.p) < 1e-3, "blocked power drift"
+print(f"blocked SIC OK: N=128 K=4, energy rel={_rel(a_blk.energy, a_seq.energy):.2e}")
+
 # every scheme has a batched Monte-Carlo path now
 for scheme in ("proposed", "wo_dt", "oma", "oma_tdma", "random"):
     a = allocate_batched(scheme, GameConfig(), h2b, jnp.full((N,), 200.0),

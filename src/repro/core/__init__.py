@@ -3,6 +3,8 @@ Stackelberg-game resource allocation and reputation-based client selection."""
 from .channel import (BANDWIDTH_HZ, noise_power, sample_channel_gains,
                       sample_positions, sample_round_channels)
 from .dinkelbach import dinkelbach_power, successive_power
+from .sic import (SIC_MODES, successive_power_any, successive_power_blocked,
+                  successive_power_eager, suffix_interference)
 from .fl_round import (FLConfig, FLState, batched_training, run_round,
                        run_training, run_training_eager, run_training_scan,
                        stack_fl_ops, stack_states, sweep_training)
@@ -27,6 +29,8 @@ from .stackelberg import (batched_equilibrium, batched_oma_allocation,
 __all__ = [
     "BANDWIDTH_HZ", "noise_power", "sample_channel_gains", "sample_positions",
     "sample_round_channels", "dinkelbach_power", "successive_power",
+    "SIC_MODES", "successive_power_any", "successive_power_blocked",
+    "successive_power_eager", "suffix_interference",
     "FLConfig", "FLState", "run_round", "run_training", "run_training_eager",
     "run_training_scan", "batched_training", "sweep_training", "stack_states",
     "stack_fl_ops", "TRACE_COUNTS", "reset_trace_counts",

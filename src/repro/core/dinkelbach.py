@@ -25,6 +25,9 @@ the default fast path.
 ``successive_power`` applies the paper's successive-optimization order
 (§V-B-3): clients are optimized N → 1 in SIC order, each seeing the already-
 fixed interference of later-decoded clients — a reverse ``lax.scan``.
+This chain is O(N) sequential; ``repro.core.sic`` solves the same fixed
+point with client-parallel Jacobi sweeps for large N (the engines select
+between them via the static ``sic_mode`` key on ``GameConfig``).
 
 Everything except ``return_trace`` mode is trace-safe: ``dinkelbach_power``
 and ``successive_power`` carry fixed-dtype arrays only, so the Stackelberg
@@ -84,11 +87,18 @@ def _inner_kkt(q, d, g, f_eff, bandwidth, lo, hi, iters: int = 200,
 
 def dinkelbach_power(d, g, f_eff, bandwidth, p_min, p_max,
                      delta: float = 1e-6, max_iter: int = 50,
-                     inner: str = "projected", return_trace: bool = False):
+                     inner: str = "projected", return_trace: bool = False,
+                     q_init=None):
     """Optimal transmit power for one client (scalar inputs).
 
     Returns (p*, q*, iterations) — q* is the optimal rate-per-energy
     R(p*)/U(p*), the quantity whose convergence Fig. 4 plots.
+
+    ``q_init`` warm-starts the Dinkelbach ratio (default 0, the paper's
+    cold start).  Dinkelbach's iteration converges to the unique q* from
+    any q₀ ≥ 0, so a warm start changes the iteration count, never the
+    fixed point — the blocked SIC engine passes the previous sweep's q to
+    cut the per-sweep solve to ~1–2 iterations.
     """
     lo = jnp.minimum(_p_floor(d, g, f_eff, bandwidth, p_min), p_max)
     hi = p_max * jnp.ones_like(lo)
@@ -109,9 +119,10 @@ def dinkelbach_power(d, g, f_eff, bandwidth, p_min, p_max,
         w = (r - q * u) / jnp.maximum(r, 1.0)      # relative Dinkelbach gap
         return (p, r / jnp.maximum(u, 1e-30), w, it + 1)
 
-    p0, q0 = hi, jnp.zeros_like(lo)
+    p0 = hi
+    q0 = jnp.zeros_like(lo) if q_init is None else q_init * jnp.ones_like(lo)
     if return_trace:  # python loop, records q per iteration (Fig. 4)
-        p, q, w, it, trace = p0, q0, jnp.inf, 0, [0.0]
+        p, q, w, it, trace = p0, q0, jnp.inf, 0, [float(q0)]
         while it < max_iter and abs(float(w)) > delta:
             p = solve(q)
             r, u = _rate(p, f_eff, bandwidth), p * d

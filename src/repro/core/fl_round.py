@@ -174,6 +174,9 @@ def allocate_batched(scheme: str, game_cfg: GameConfig, h2_batch, d_batch,
     EVERY scheme batches — proposed/ideal/wo_dt through the Stackelberg
     engine, OMA-FDMA/OMA-TDMA/random through their vmapped baseline
     bodies — and the K axis is device-sharded (single-device no-op).
+    Large-N cells opt into the blocked SIC power engine through
+    ``game_cfg.sic_mode`` (a static key — see ``repro.core.sic``), which
+    reaches every Stackelberg-backed scheme here.
     ``epsilon`` (DT mapping deviation) reaches the engine for the DT
     schemes; "wo_dt" has no twin and ignores it (matching
     ``wo_dt_allocation``).  ``key`` seeds the "random" scheme's per-draw
@@ -222,21 +225,21 @@ def sweep_allocation(scheme: str, configs, h2_batch, d_batch, v_max_batch,
 
 
 def _allocate_traced(scheme: str, phys, inner: str, key, h2_sorted, d_units,
-                     v_max_sel) -> Allocation:
+                     v_max_sel, sic_mode: str = "sequential") -> Allocation:
     """Scheme dispatch inside the traced round body: direct calls into the
     shared solver bodies with the traced ``GamePhysics`` — no nested jit
     wrappers, no host syncs, one executable across GameConfig values.
-    ``scheme``/``inner`` are static (compile keys); everything else is an
-    operand."""
+    ``scheme``/``inner``/``sic_mode`` are static (compile keys); everything
+    else is an operand."""
     dtype = jnp.result_type(h2_sorted)
     tol = jnp.asarray(1e-6, dtype)
     eps0 = jnp.asarray(0.0, dtype)
     if scheme in ("proposed", "ideal"):
         return _solve(phys, h2_sorted, d_units, v_max_sel, eps0, 20, tol,
-                      inner)
+                      inner, sic_mode)
     if scheme == "wo_dt":
         return _solve(phys, h2_sorted, d_units, jnp.zeros_like(h2_sorted),
-                      eps0, 20, tol, inner)
+                      eps0, 20, tol, inner, sic_mode)
     if scheme == "oma":
         return _oma_body(phys, h2_sorted, d_units, v_max_sel, eps0, inner,
                          tdma=False)
@@ -253,8 +256,8 @@ def _allocate_traced(scheme: str, phys, inner: str, key, h2_sorted, d_units,
 # ---------------------------------------------------------------------------
 def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
                 use_roni: bool, n_selected: int, local_steps: int,
-                server_steps: int, inner: str,
-                logits_fn: Callable) -> Tuple[FLState, Dict]:
+                server_steps: int, inner: str, logits_fn: Callable,
+                sic_mode: str = "sequential") -> Tuple[FLState, Dict]:
     """One FL round as a pure traced function.
 
     ``phys`` is the ``GamePhysics`` pytree; ``ops`` the dict of traced FL
@@ -279,7 +282,7 @@ def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
     d_units = data.sizes[sel_sorted] * ops["samples_per_unit"]
     v_max_sel = state.v_max[sel_sorted]
     alloc = _allocate_traced(scheme, phys, inner, k_alloc, h2_sorted,
-                             d_units, v_max_sel)
+                             d_units, v_max_sel, sic_mode)
     v = alloc.v if scheme != "ideal" else jnp.zeros_like(alloc.v)
 
     # 4. DT split of the selected clients' data
@@ -398,7 +401,7 @@ def _static_kwargs(fl: FLConfig, game: GameConfig, logits_fn: Callable):
     return dict(scheme=fl.scheme, use_roni=fl.use_roni,
                 n_selected=fl.n_selected, local_steps=fl.local_steps,
                 server_steps=fl.server_steps, inner=game.dinkelbach_inner,
-                logits_fn=logits_fn)
+                logits_fn=logits_fn, sic_mode=game.sic_mode)
 
 
 def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
@@ -434,7 +437,8 @@ def run_training_eager(state: FLState, data: FedData, fl: FLConfig,
 # scan-compiled trajectory + seed-vmapped sweeps
 # ---------------------------------------------------------------------------
 _TRAINING_STATIC = ("scheme", "use_roni", "n_selected", "local_steps",
-                    "server_steps", "inner", "logits_fn", "rounds")
+                    "server_steps", "inner", "logits_fn", "rounds",
+                    "sic_mode")
 
 
 @partial(jax.jit, static_argnames=_TRAINING_STATIC)

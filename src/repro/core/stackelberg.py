@@ -47,7 +47,6 @@ gains a leading K axis, under ``sweep_equilibrium`` a [C, K] prefix.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 from dataclasses import dataclass, field
 from functools import lru_cache, partial
@@ -60,23 +59,12 @@ import jax.numpy as jnp
 
 from . import noma
 from .channel import BANDWIDTH_HZ, noise_power
-from .dinkelbach import dinkelbach_power, successive_power
+from .dinkelbach import dinkelbach_power
+from .sic import SIC_MODES, successive_power_any
+# re-exported from .tracking (the historical import site for both)
+from .tracking import TRACE_COUNTS, reset_trace_counts
 
 TAU = 2e-28  # effective capacitance coefficient (Table I / [22])
-
-# traces of each jitted entry point — a proxy for XLA compiles (the Python
-# body executes once per new specialization).  Keyed by entry-point name.
-TRACE_COUNTS: collections.Counter = collections.Counter()
-
-
-def reset_trace_counts() -> None:
-    """Zero every trace counter (the jit caches themselves are untouched).
-
-    Test isolation: ``TRACE_COUNTS`` deltas asserted in one test must not
-    depend on which other tests ran first — an autouse fixture calls this
-    before each test, so every assertion starts from a clean counter and
-    snapshots its own ``before`` value."""
-    TRACE_COUNTS.clear()
 
 
 @dataclass(frozen=True)
@@ -86,8 +74,15 @@ class GameConfig:
     The physics fields are NOT static jit arguments: the solvers receive
     them as a traced ``GamePhysics`` pytree (see ``physics()``), so any
     number of distinct parameterizations share one compiled engine.  Only
-    ``dinkelbach_inner`` (an algorithm choice, not an operand) stays
-    static.
+    ``dinkelbach_inner`` and ``sic_mode`` (algorithm choices, not
+    operands) stay static.
+
+    ``sic_mode`` selects the successive-power engine (``repro.core.sic``):
+    ``sequential`` (the paper's reverse-scan SIC chain, default) or
+    ``blocked`` / ``blocked_interpret`` / ``blocked_pallas`` (Jacobi
+    fixed-point sweeps for large N, suffix interference via jnp or the
+    Pallas kernel) — every tier (single/batched/sweep, and the FL round)
+    reads it off the config.
     """
     bandwidth: float = BANDWIDTH_HZ
     sigma2: float = field(default_factory=noise_power)
@@ -101,6 +96,7 @@ class GameConfig:
     model_bits: float = 1.0e6                 # d_n = 1 Mbit
     tau: float = TAU
     dinkelbach_inner: str = "projected"
+    sic_mode: str = "sequential"
 
     def physics(self, dtype=jnp.float32) -> "GamePhysics":
         """Traced-operand view of the physics fields (scalar leaves)."""
@@ -139,11 +135,15 @@ def stack_physics(configs: Sequence[GameConfig],
                   dtype=jnp.float32) -> GamePhysics:
     """Stack C configs into a GamePhysics with [C]-shaped leaves — the
     leading config axis of ``sweep_equilibrium``.  All configs must agree
-    on the static ``dinkelbach_inner``."""
+    on the static keys ``dinkelbach_inner`` and ``sic_mode``."""
     inners = {c.dinkelbach_inner for c in configs}
     if len(inners) != 1:
         raise ValueError(f"sweep configs mix dinkelbach_inner={inners}; "
                          "the inner solver is static — sweep each separately")
+    modes = {c.sic_mode for c in configs}
+    if len(modes) != 1:
+        raise ValueError(f"sweep configs mix sic_mode={modes}; the SIC "
+                         "engine choice is static — sweep each separately")
     return GamePhysics(**{name: jnp.asarray([getattr(c, name)
                                              for c in configs], dtype)
                           for name in _PHYSICS_FIELDS})
@@ -266,18 +266,20 @@ def round_metrics(cfg, D, v, f, p, h2_sorted):
     return rates, t_cmp, t_com, e_cmp, e_com
 
 
-def _leader_iteration(cfg, h2_sorted, D, v, f, inner: str):
+def _leader_iteration(cfg, h2_sorted, D, v, f, inner: str,
+                      sic_mode: str = "sequential"):
     """One Alg.-2 leader sweep: p via successive Dinkelbach given the current
     compute times, then f runs to the deadline given the new airtimes.
 
     Shared verbatim by the eager reference loop and the traced engine so the
-    two paths are numerically identical per iteration.  ``inner`` is the
-    static Dinkelbach inner-solver choice (the non-physics remainder of
-    GameConfig)."""
+    two paths are numerically identical per iteration.  ``inner`` /
+    ``sic_mode`` are the static Dinkelbach / SIC-engine choices (the
+    non-physics remainder of GameConfig)."""
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
     g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
-    p, q = successive_power(h2_sorted, cfg.model_bits, g_n, cfg.bandwidth,
-                            cfg.sigma2, cfg.p_min, cfg.p_max, inner=inner)
+    p, q = successive_power_any(h2_sorted, cfg.model_bits, g_n,
+                                cfg.bandwidth, cfg.sigma2, cfg.p_min,
+                                cfg.p_max, inner=inner, sic_mode=sic_mode)
     rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
     t_com = noma.tx_latency(cfg.model_bits, rates)
     a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
@@ -307,7 +309,8 @@ def _finish(cfg, h2_sorted, D, v, f, p, q, d_hat, iterations,
 
 
 def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
-           inner: str = "projected") -> Allocation:
+           inner: str = "projected",
+           sic_mode: str = "sequential") -> Allocation:
     """Traced Alg.-2 alternation: a ``lax.while_loop`` whose carry holds the
     best-iterate safeguard and the convergence flag as arrays.
 
@@ -332,7 +335,8 @@ def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
 
     def body(carry):
         f, p, q, prev_e, bb, be, bf, bp, bq, it, _done = carry
-        f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f, inner)
+        f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f, inner,
+                                             sic_mode)
         bad = jnp.where(feas, jnp.asarray(0.0, dtype),
                         jnp.asarray(1.0, dtype))
         # strict lexicographic improvement, matching the legacy tuple compare
@@ -353,30 +357,31 @@ def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
     return _finish(cfg, h2_sorted, D, v, bf, bp, bq, d_hat, it, bb == 0.0)
 
 
-@partial(jax.jit, static_argnames=("max_iter", "inner"))
+@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
 def _equilibrium_jit(phys, h2_sorted, D, v_max, epsilon, tol, max_iter,
-                     inner):
+                     inner, sic_mode):
     TRACE_COUNTS["equilibrium"] += 1
-    return _solve(phys, h2_sorted, D, v_max, epsilon, max_iter, tol, inner)
+    return _solve(phys, h2_sorted, D, v_max, epsilon, max_iter, tol, inner,
+                  sic_mode)
 
 
-@partial(jax.jit, static_argnames=("max_iter", "inner"))
+@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
 def _batched_equilibrium_jit(phys, h2_batch, D_batch, v_max_batch, epsilon,
-                             tol, max_iter, inner):
+                             tol, max_iter, inner, sic_mode):
     TRACE_COUNTS["batched_equilibrium"] += 1
     solve1 = lambda h2, d, vm: _solve(phys, h2, d, vm, epsilon, max_iter,
-                                      tol, inner)
+                                      tol, inner, sic_mode)
     return jax.vmap(solve1)(h2_batch, D_batch, v_max_batch)
 
 
-@partial(jax.jit, static_argnames=("max_iter", "inner"))
+@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
 def _sweep_equilibrium_jit(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c, tol,
-                           max_iter, inner):
+                           max_iter, inner, sic_mode):
     TRACE_COUNTS["sweep_equilibrium"] += 1
 
     def solve_config(ph, h2_kn, d_kn, vm_kn, eps):
         solve1 = lambda h2, d, vm: _solve(ph, h2, d, vm, eps, max_iter,
-                                          tol, inner)
+                                          tol, inner, sic_mode)
         return jax.vmap(solve1)(h2_kn, d_kn, vm_kn)
 
     return jax.vmap(solve_config)(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c)
@@ -462,7 +467,8 @@ def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
     phys, h2, D, v_max, eps, tol = _canon_single(cfg, h2_sorted, D, v_max,
                                                  epsilon, tol)
     return _equilibrium_jit(phys, h2, D, v_max, eps, tol, max_iter=max_iter,
-                            inner=cfg.dinkelbach_inner)
+                            inner=cfg.dinkelbach_inner,
+                            sic_mode=cfg.sic_mode)
 
 
 def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
@@ -484,7 +490,8 @@ def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
                                              v_max_batch, epsilon, tol)
     return _batched_equilibrium_jit(phys, h2, D, vm, eps, tol,
                                     max_iter=max_iter,
-                                    inner=cfg.dinkelbach_inner)
+                                    inner=cfg.dinkelbach_inner,
+                                    sic_mode=cfg.sic_mode)
 
 
 def sweep_equilibrium(configs: Sequence[GameConfig], h2_batch, D, v_max,
@@ -503,10 +510,12 @@ def sweep_equilibrium(configs: Sequence[GameConfig], h2_batch, D, v_max,
 
     Returns an ``Allocation`` with a [C, K] leading prefix on every field.
     """
+    configs = list(configs)
     phys, h2, D, vm, eps, tol, inner = _canon_sweep(configs, h2_batch, D,
                                                     v_max, epsilon, tol)
     return _sweep_equilibrium_jit(phys, h2, D, vm, eps, tol,
-                                  max_iter=max_iter, inner=inner)
+                                  max_iter=max_iter, inner=inner,
+                                  sic_mode=configs[0].sic_mode)
 
 
 def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
@@ -531,7 +540,8 @@ def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
     best = None   # best-iterate safeguard (see _solve)
     for it in range(1, max_iter + 1):
         f, p, q, e_total, feas = _leader_iteration(cfg, h2_sorted, D, v, f,
-                                                   cfg.dinkelbach_inner)
+                                                   cfg.dinkelbach_inner,
+                                                   cfg.sic_mode)
         cand = (not bool(feas), float(e_total), (f, p, q))
         if best is None or cand[:2] < best[:2]:
             best = cand

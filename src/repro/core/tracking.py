@@ -1,0 +1,24 @@
+"""Shared recompile accounting for every jitted engine entry point.
+
+``TRACE_COUNTS`` counts actual traces (the Python body of a jitted function
+only runs when XLA compiles a new specialization) — the proof object behind
+the zero-mid-sweep-recompile tests and the benchmarks' ``recompiles``
+fields.  It lives in its own module so both ``stackelberg`` (which re-exports
+it — the historical import site) and ``sic`` can increment it without an
+import cycle (``stackelberg`` imports ``sic``).
+"""
+from __future__ import annotations
+
+import collections
+
+TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def reset_trace_counts() -> None:
+    """Zero every trace counter (the jit caches themselves are untouched).
+
+    Test isolation: ``TRACE_COUNTS`` deltas asserted in one test must not
+    depend on which other tests ran first — an autouse fixture calls this
+    before each test, so every assertion starts from a clean counter and
+    snapshots its own ``before`` value."""
+    TRACE_COUNTS.clear()

@@ -9,7 +9,8 @@ from __future__ import annotations
 
 import jax
 
-from .ref import ssd_scan_ref, swa_attention_ref
+from .ref import sic_suffix_ref, ssd_scan_ref, swa_attention_ref
+from .sic_suffix import sic_suffix_pallas
 from .ssd_scan import ssd_scan_pallas
 from .swa_attention import swa_attention_pallas
 
@@ -24,6 +25,22 @@ def ssd_scan(x, dt, a, b, c, chunk: int = 128, mode: str = "auto"):
         return ssd_scan_ref(x, dt, a, b, c)
     interpret = (mode == "interpret") or not _on_tpu()
     return ssd_scan_pallas(x, dt, a, b, c, chunk=chunk, interpret=interpret)
+
+
+def sic_suffix_sum(w, block: int = 128, mode: str = "auto"):
+    """Exclusive suffix sum along the last axis of ``w`` [..., N] — the SIC
+    interference scan of the large-N power engine (``repro.core.sic``).
+
+    mode: auto | pallas | interpret | ref — same switch as ``ssd_scan``:
+    ``ref`` is the jnp flip-cumsum oracle (and the ``auto`` choice off-TPU),
+    ``interpret`` forces the Pallas kernel through the CPU interpreter
+    (validation), ``pallas`` compiles it (TPU)."""
+    if mode == "ref" or (mode == "auto" and not _on_tpu()):
+        return sic_suffix_ref(w)
+    interpret = (mode == "interpret") or not _on_tpu()
+    flat = w.reshape((-1, w.shape[-1]))
+    return sic_suffix_pallas(flat, block=block,
+                             interpret=interpret).reshape(w.shape)
 
 
 def swa_attention(q, k, v, window: int = 0, softcap: float = 0.0,

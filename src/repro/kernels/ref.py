@@ -31,6 +31,18 @@ def ssd_scan_ref(x, dt, a, b, c):
     return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
 
 
+def sic_suffix_ref(w):
+    """Exclusive suffix sum along the last axis: s[..., n] = Σ_{j>n} w[..., j]
+    — the SIC interference each client sees from later-decoded clients.
+    Shift-then-cumsum (NOT inclusive-minus-self, which cancels
+    catastrophically when a small w[j] follows a large one — exactly the
+    near/far-user power spread SIC ordering produces); any leading dims."""
+    rev = jnp.flip(w, -1)
+    shifted = jnp.concatenate([jnp.zeros_like(rev[..., :1]), rev[..., :-1]],
+                              -1)
+    return jnp.flip(jnp.cumsum(shifted, -1), -1)
+
+
 def swa_attention_ref(q, k, v, window: int = 0, softcap: float = 0.0):
     """Causal (optionally sliding-window) attention.
     q/k/v: [BH, S, D] -> [BH, S, D]."""
