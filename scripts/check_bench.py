@@ -13,6 +13,12 @@ Tracked bench files and their gated metrics (higher is better):
       - ``vmap_rounds_per_sec``        — the seed-vmapped trajectory sweep;
       - ``sweep.sweep_rounds_per_sec`` — the C×S config-grid training
         sweep (the Fig. 5/6/7/8 workload as one dispatch).
+  * ``BENCH_serve.json``
+      - ``requests_per_sec``           — sustained throughput of the
+        ragged-N streaming allocation service under the mixed-N arrival
+        trace (``benchmarks/serve_latency.py``; p50/p99 latencies are
+        recorded there but not gated — wall-clock percentiles on shared
+        CI hosts are too noisy for a hard gate).
     (The host-loop baseline tiers are recorded but not gated — they are
     the slow references, and their host-side dispatch overhead is the
     noisiest number in the file.)
@@ -20,7 +26,9 @@ Tracked bench files and their gated metrics (higher is better):
 Exit code 0 = pass (or nothing to compare: missing file, no git baseline,
 or the baseline predates a metric).  Exit 1 = a gated metric regressed
 >20% — or vanished from the current file while the baseline tracks it
-(a bench that silently stops reporting a rate must not pass the gate).
+(a bench that silently stops reporting a rate must not pass the gate) —
+or the current file is corrupt (a half-written JSON from a killed bench
+run FAILS that bench explicitly; it must not exit 0 via the SKIP path).
 Run directly or let ``scripts/dev_smoke.py`` invoke it.
 """
 from __future__ import annotations
@@ -62,18 +70,39 @@ def _training_metrics(doc) -> dict:
     return out
 
 
+def _serve_metrics(doc) -> dict:
+    out = {}
+    if doc.get("requests_per_sec") is not None:
+        out["requests_per_sec"] = float(doc["requests_per_sec"])
+    return out
+
+
 BENCHES = (
     ("BENCH_equilibrium.json", _equilibrium_metrics),
     ("BENCH_training.json", _training_metrics),
+    ("BENCH_serve.json", _serve_metrics),
 )
+
+# sentinel for "file exists but is unreadable" — distinct from None
+# ("file absent", a legitimate SKIP): a corrupt bench must FAIL the gate
+class _Corrupt:
+    def __init__(self, reason: str):
+        self.reason = reason
 
 
 def _load_current(name: str):
+    """Parse the working-tree bench file.  Absent → None (SKIP).  Present
+    but unparseable (half-written JSON from a killed bench run, bad
+    encoding, unreadable file) → ``_Corrupt`` so the caller fails that
+    bench EXPLICITLY instead of crashing or skipping."""
     path = os.path.join(REPO_ROOT, name)
     if not os.path.exists(path):
         return None
-    with open(path) as f:
-        return json.load(f)
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, UnicodeDecodeError, OSError) as e:
+        return _Corrupt(f"{type(e).__name__}: {e}")
 
 
 def _load_committed(name: str):
@@ -92,6 +121,9 @@ def _check_one(name: str, metrics_fn):
     """Returns (failures, lines) for one bench file; skips when the file or
     its committed baseline is absent."""
     cur, ref = _load_current(name), _load_committed(name)
+    if isinstance(cur, _Corrupt):
+        return ([f"{name}:corrupt"],
+                [f"  CORRUPT bench file ({cur.reason}) FAILED"])
     if cur is None or ref is None:
         why = f"no {name}" if cur is None else \
               f"no committed baseline for {name} (git show failed)"
@@ -130,7 +162,7 @@ def check(verbose: bool = True) -> int:
                 print(line)
         all_failures.extend(failures)
     if all_failures:
-        print(f"check_bench: FAIL — regressed >{TOLERANCE:.0%}: "
+        print(f"check_bench: FAIL — regressed >{TOLERANCE:.0%} or corrupt: "
               f"{', '.join(all_failures)}")
         return 1
     if verbose:

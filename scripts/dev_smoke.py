@@ -158,6 +158,29 @@ assert TRACE_COUNTS["run_round"] - _before == 1, "sweep retraced run_round"
 print(f"sweep_training OK: C=2 x S=2 x R=2, 1 trace, "
       f"val_acc={float(_grid['val_acc'][0, 0, -1]):.3f}")
 
+# ragged-N streaming allocation service: 4 mixed-N requests spanning two
+# buckets — padded solves finite, results restored to request order, and
+# EXACTLY one trace per touched bucket executable (ISSUE 6 smoke)
+import numpy as np
+from repro.launch.alloc_serve import AllocationService, AllocRequest
+
+_svc = AllocationService(buckets=(8, 16), max_batch=2)
+_before = TRACE_COUNTS["serve_allocation"]
+_rng = np.random.default_rng(5)
+_ns = (3, 7, 12, 5)                        # buckets: 8, 8, 16, 8
+for _n in _ns:
+    _svc.submit(AllocRequest(h2=_rng.uniform(0.2, 2.0, _n), d=200.0,
+                             v_max=0.5, epsilon=0.05))
+_res = sorted(_svc.drain(), key=lambda r: r.rid)
+assert [r.n for r in _res] == list(_ns)
+assert [r.bucket for r in _res] == [8, 8, 16, 8]
+assert all(np.isfinite(r.energy) and np.all(np.isfinite(r.p)) for r in _res)
+_touched = len({(r.bucket) for r in _res})
+assert TRACE_COUNTS["serve_allocation"] - _before == _touched, \
+    "alloc-serve traced more than once per bucket"
+print(f"alloc serve OK: {len(_res)} mixed-N requests, "
+      f"{_touched} buckets, 1 trace each")
+
 # benchmark regression gate (no-op when BENCH json / git baseline is absent)
 import pathlib, subprocess, sys
 _root = pathlib.Path(__file__).resolve().parents[1]

@@ -36,6 +36,31 @@ the model kernels (``auto | pallas | interpret | ref``): jnp flip-cumsum
 oracle on CPU, blocked Pallas scan (``kernels/sic_suffix.py``) on TPU or
 under the CPU interpreter for validation.
 
+Padded (masked) tails — the ragged-N serving contract: the allocation
+service (``repro.launch.alloc_serve``) pads variable-N cells up to a
+bucket width with ZERO channel gains at the tail of the SIC order.  Both
+engines here are invariant to such tails by construction, with no mask
+operand needed at this level:
+
+  * interference: a padded lane contributes p·|h|² = p·0 = 0 to every
+    suffix sum, so real clients' effective gains F_n match the exact-N
+    solve — bit-identical through the Pallas kernel's sequential carry
+    (zero blocks add exactly 0.0); the jnp flip-cumsum oracle is an XLA
+    associative tree whose shape changes with padding, so it lands
+    within the repo's 1e-5 relative budget instead;
+  * the padded lane itself: F = 0 ⇒ rate ≡ 0, the Dinkelbach rate-floor
+    power goes to +inf and is clipped to the box top, so p = p_max,
+    q = 0 — finite, and discarded by the service's mask anyway;
+  * SIC ordering: gains sort descending, so an all-zero tail never
+    interleaves with real clients;
+  * sweep count (blocked engine): padded lanes are stationary after the
+    first sweep (Δp = 0), so the while-loop exit is driven by the real
+    lanes exactly as in the exact-N solve.
+
+``tests/test_sic.py::TestPaddedTail`` asserts all of this; the masking of
+round-level reductions (latency maxima, energy sums) lives one level up
+in ``stackelberg.round_metrics``.
+
 Mode switch (the static ``sic_mode`` key on ``GameConfig``, threaded
 through every engine tier):
 

@@ -202,9 +202,14 @@ def dt_compute_latency(c, d_hat, alpha, f_server):
 # follower: Theorem 1
 # ---------------------------------------------------------------------------
 def follower_alpha(c, d_hat, t_total, f_server) -> Tuple[jax.Array, jax.Array]:
-    """Optimal DT frequency shares.  Returns (alpha [N], t_S scalar)."""
+    """Optimal DT frequency shares.  Returns (alpha [N], t_S scalar).
+
+    The Eq.-26 denominator is guarded: a degenerate cell with zero DT load
+    AND zero round latency (every client masked out in a padded serving
+    bucket) is 0/0 without the floor, and the NaN would leak into
+    ``t_dt``/latency of that lane."""
     load = c * d_hat                                # CPU cycles per client
-    alpha_case1 = load / (t_total * f_server)       # Eq. (26)
+    alpha_case1 = load / jnp.maximum(t_total * f_server, 1e-12)   # Eq. (26)
     saturated = jnp.sum(alpha_case1) > 1.0
     alpha_case2 = load / jnp.maximum(jnp.sum(load), 1e-12)   # Eq. (29)
     alpha = jnp.where(saturated, alpha_case2, alpha_case1)
@@ -255,26 +260,44 @@ jax.tree_util.register_dataclass(Allocation, data_fields=_ALLOC_FIELDS,
                                  meta_fields=())
 
 
-def round_metrics(cfg, D, v, f, p, h2_sorted):
+def round_metrics(cfg, D, v, f, p, h2_sorted, mask=None):
     """Per-client latency/energy terms.  ``cfg`` may be a ``GameConfig``
-    (floats — eager paths, tests) or a ``GamePhysics`` (traced)."""
+    (floats — eager paths, tests) or a ``GamePhysics`` (traced).
+
+    ``mask`` (optional [N] bool, a traced operand) marks the REAL clients
+    of a padded serving bucket.  Padded lanes carry h2 = 0 so they are
+    invisible to the SIC interference chain (p·|h|² = 0 contributes
+    nothing to any real client's suffix sum), but their zero rate would
+    otherwise surface as a huge ``t_com`` (= d / rate-floor) that poisons
+    the round maxima and energy sums — so every per-client term is zeroed
+    on masked-out lanes with ``where`` (NOT multiplication: 0·inf = NaN).
+    ``mask=None`` compiles the exact pre-existing unmasked program."""
     rates = noma.noma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
     t_com = noma.tx_latency(cfg.model_bits, rates)
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
     e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
+    if mask is not None:
+        zero = jnp.zeros((), rates.dtype)
+        rates = jnp.where(mask, rates, zero)
+        t_com = jnp.where(mask, t_com, zero)
+        t_cmp = jnp.where(mask, t_cmp, zero)
+        e_cmp = jnp.where(mask, e_cmp, zero)
     e_com = noma.tx_energy(p, t_com)
     return rates, t_cmp, t_com, e_cmp, e_com
 
 
 def _leader_iteration(cfg, h2_sorted, D, v, f, inner: str,
-                      sic_mode: str = "sequential"):
+                      sic_mode: str = "sequential", mask=None):
     """One Alg.-2 leader sweep: p via successive Dinkelbach given the current
     compute times, then f runs to the deadline given the new airtimes.
 
     Shared verbatim by the eager reference loop and the traced engine so the
     two paths are numerically identical per iteration.  ``inner`` /
     ``sic_mode`` are the static Dinkelbach / SIC-engine choices (the
-    non-physics remainder of GameConfig)."""
+    non-physics remainder of GameConfig).  ``mask`` (see ``round_metrics``)
+    keeps padded-bucket lanes out of the energy sum and the feasibility
+    max; the masked lanes' p (pinned at p_max against h2 = 0) never
+    perturbs real clients because p·|h|² = 0 in every suffix sum."""
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
     g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)        # rate-floor slack
     p, q = successive_power_any(h2_sorted, cfg.model_bits, g_n,
@@ -284,17 +307,18 @@ def _leader_iteration(cfg, h2_sorted, D, v, f, inner: str,
     t_com = noma.tx_latency(cfg.model_bits, rates)
     a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
     f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
-    _, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p, h2_sorted)
+    _, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p, h2_sorted,
+                                                  mask)
     e_total = jnp.sum(e_cmp + e_com)
     feasible = jnp.max(t_cmp + t_com) <= cfg.t_max + 1e-6
     return f, p, q, e_total, feasible
 
 
 def _finish(cfg, h2_sorted, D, v, f, p, q, d_hat, iterations,
-            feasible) -> Allocation:
+            feasible, mask=None) -> Allocation:
     """Follower best response to the leader's final strategy (Eq. 17)."""
     rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
-                                                      h2_sorted)
+                                                      h2_sorted, mask)
     t_total = jnp.max(t_cmp + t_com)
     alpha, _t_s = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
                                  cfg.f_server)
@@ -309,8 +333,8 @@ def _finish(cfg, h2_sorted, D, v, f, p, q, d_hat, iterations,
 
 
 def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
-           inner: str = "projected",
-           sic_mode: str = "sequential") -> Allocation:
+           inner: str = "projected", sic_mode: str = "sequential",
+           mask=None) -> Allocation:
     """Traced Alg.-2 alternation: a ``lax.while_loop`` whose carry holds the
     best-iterate safeguard and the convergence flag as arrays.
 
@@ -318,12 +342,26 @@ def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
     alternation is not guaranteed monotone near infeasible channel draws,
     so we return the lowest-energy deadline-feasible-first iterate —
     same policy as the legacy loop, minus the host syncs.
+
+    ``mask`` ([N] bool operand, default None = all real) is the padded
+    serving buckets' ragged-N story: masked lanes must carry h2 = 0 (tail
+    of the SIC order) and are erased from d_hat, every latency/energy
+    reduction and the feasibility test, so a request solved in a bucket
+    with padding is bit-identical to its exact-N solve (asserted in
+    tests/test_alloc_serve.py).  ``mask=None`` traces the historical
+    unmasked program unchanged.
     """
     n = h2_sorted.shape[0]
     dtype = jnp.result_type(h2_sorted)
     v = leader_v(jnp.broadcast_to(v_max, (n,)).astype(dtype))
     D = jnp.broadcast_to(D, (n,)).astype(dtype)
     d_hat = v * D + epsilon                       # DT-mapped data size
+    if mask is not None:
+        # padded lanes: no DT load (ε would otherwise leak into the
+        # follower's α shares), no insensitive fraction
+        zero = jnp.zeros((), dtype)
+        v = jnp.where(mask, v, zero)
+        d_hat = jnp.where(mask, d_hat, zero)
     f0 = jnp.full((n,), cfg.f_max, dtype)
     p0 = jnp.full((n,), cfg.p_max, dtype)
     q0 = jnp.zeros((n,), dtype)
@@ -336,7 +374,7 @@ def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
     def body(carry):
         f, p, q, prev_e, bb, be, bf, bp, bq, it, _done = carry
         f, p, q, e, feas = _leader_iteration(cfg, h2_sorted, D, v, f, inner,
-                                             sic_mode)
+                                             sic_mode, mask)
         bad = jnp.where(feas, jnp.asarray(0.0, dtype),
                         jnp.asarray(1.0, dtype))
         # strict lexicographic improvement, matching the legacy tuple compare
@@ -354,7 +392,8 @@ def _solve(cfg, h2_sorted, D, v_max, epsilon, max_iter: int, tol,
             jnp.asarray(0, jnp.int32), jnp.asarray(False))
     carry = jax.lax.while_loop(cond, body, init)
     _f, _p, _q, _e, bb, _be, bf, bp, bq, it, _done = carry
-    return _finish(cfg, h2_sorted, D, v, bf, bp, bq, d_hat, it, bb == 0.0)
+    return _finish(cfg, h2_sorted, D, v, bf, bp, bq, d_hat, it, bb == 0.0,
+                   mask)
 
 
 @partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
@@ -556,9 +595,13 @@ def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
 # ---------------------------------------------------------------------------
 # baselines for Fig. 9 — same three-tier layout (single / batched / sweep)
 # ---------------------------------------------------------------------------
-def _random_body(cfg, key, h2_sorted, D, v_max, epsilon) -> Allocation:
+def _random_body(cfg, key, h2_sorted, D, v_max, epsilon,
+                 mask=None) -> Allocation:
     """Random resource allocation baseline (same selection, random p/f/v).
-    Traced body shared by the single/batched/sweep entry points."""
+    Traced body shared by the single/batched/sweep entry points and (with
+    ``mask``) the padded serving buckets — note the random draws are
+    bucket-shaped, so unlike the deterministic schemes a padded solve is
+    distributionally, not bitwise, equivalent to the exact-N one."""
     n = h2_sorted.shape[0]
     dtype = jnp.result_type(h2_sorted)
     k1, k2, k3 = jax.random.split(key, 3)
@@ -570,8 +613,12 @@ def _random_body(cfg, key, h2_sorted, D, v_max, epsilon) -> Allocation:
                                                            cfg.p_min)
     D = jnp.broadcast_to(D, (n,)).astype(dtype)
     d_hat = v * D + epsilon
+    if mask is not None:
+        zero = jnp.zeros((), dtype)
+        v = jnp.where(mask, v, zero)
+        d_hat = jnp.where(mask, d_hat, zero)
     rates, t_cmp, t_com, e_cmp, e_com = round_metrics(cfg, D, v, f, p,
-                                                      h2_sorted)
+                                                      h2_sorted, mask)
     t_total = jnp.max(t_cmp + t_com)
     alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
                               cfg.f_server)
@@ -586,25 +633,38 @@ def _random_body(cfg, key, h2_sorted, D, v_max, epsilon) -> Allocation:
 
 
 def _oma_body(cfg, h2_sorted, D, v_max, epsilon, inner: str,
-              tdma: bool) -> Allocation:
+              tdma: bool, mask=None) -> Allocation:
     """OMA baseline body — FDMA (B/N sub-bands) or TDMA (sequential
     full-band slots), fully traced: the per-client Dinkelbach solves are a
     client-axis ``vmap`` instead of a host loop, so the whole baseline
-    jits/vmaps like the proposed engine."""
+    jits/vmaps like the proposed engine.
+
+    With ``mask`` the orthogonal split is over the REAL client count
+    Σmask, not the padded bucket width — unlike NOMA (where zero-gain
+    padding is invisible by construction), OMA's per-client bandwidth /
+    slot share depends on N directly, so a padded solve would otherwise
+    hand every real client a thinner sub-band than its exact-N solve."""
     n = h2_sorted.shape[0]
     dtype = jnp.result_type(h2_sorted)
     v = leader_v(jnp.broadcast_to(v_max, (n,)).astype(dtype))
     D = jnp.broadcast_to(D, (n,)).astype(dtype)
     f = jnp.full((n,), cfg.f_max, dtype)
     d_hat = v * D + epsilon
+    if mask is not None:
+        zero = jnp.zeros((), dtype)
+        v = jnp.where(mask, v, zero)
+        d_hat = jnp.where(mask, d_hat, zero)
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
+    # real-client count: the orthogonal resource divisor (== n unmasked)
+    n_eff = n if mask is None else jnp.maximum(
+        jnp.sum(mask.astype(dtype)), jnp.ones((), dtype))
     if tdma:
         # per-client slot budget: (Tmax − t_cmp)/N, full band per slot
-        g_n = jnp.maximum((cfg.t_max - t_cmp) / n, 1e-3)
+        g_n = jnp.maximum((cfg.t_max - t_cmp) / n_eff, 1e-3)
         bw, s2 = cfg.bandwidth, cfg.sigma2
     else:
         g_n = jnp.maximum(cfg.t_max - t_cmp, 1e-3)
-        bw, s2 = cfg.bandwidth / n, cfg.sigma2 / n
+        bw, s2 = cfg.bandwidth / n_eff, cfg.sigma2 / n_eff
 
     def solve(h2_n, g_nn):
         p_n, q_n, _ = dinkelbach_power(cfg.model_bits, g_nn, h2_n / s2, bw,
@@ -615,15 +675,24 @@ def _oma_body(cfg, h2_sorted, D, v_max, epsilon, inner: str,
     if tdma:
         rates = cfg.bandwidth * jnp.log2(1.0 + p * h2_sorted / cfg.sigma2)
         t_own = noma.tx_latency(cfg.model_bits, rates)  # own-slot airtime
+        if mask is not None:
+            t_own = jnp.where(mask, t_own, jnp.zeros((), dtype))
         t_com = jnp.sum(t_own) * jnp.ones_like(t_own)   # sequential round
     else:
-        rates = noma.oma_rates(p, h2_sorted, cfg.bandwidth, cfg.sigma2)
+        rates = bw * jnp.log2(1.0 + p * h2_sorted / s2)  # == oma_rates @ n_eff
         t_own = t_com = noma.tx_latency(cfg.model_bits, rates)
+        if mask is not None:
+            t_own = t_com = jnp.where(mask, t_own, jnp.zeros((), dtype))
     a_n = jnp.maximum(cfg.t_max - t_com, 1e-3)
     f = leader_f(cfg.cycles_per_sample, v, D, a_n, cfg.f_min, cfg.f_max)
     t_cmp = local_compute_latency(cfg.cycles_per_sample, v, D, f)
     e_cmp = local_compute_energy(cfg.cycles_per_sample, v, D, f, cfg.tau)
     e_com = noma.tx_energy(p, t_own)                    # energy over own slot
+    if mask is not None:
+        zero = jnp.zeros((), dtype)
+        rates = jnp.where(mask, rates, zero)
+        t_cmp = jnp.where(mask, t_cmp, zero)
+        e_cmp = jnp.where(mask, e_cmp, zero)
     t_total = jnp.max(t_cmp + t_com)
     alpha, _ = follower_alpha(cfg.cycles_per_sample, d_hat, t_total,
                               cfg.f_server)

@@ -21,6 +21,15 @@ body lowers on TPU and runs under interpret mode on CPU.
 Layout: w [B, N] → s [B, N]; f32 accumulation; N is zero-padded up to a
 block multiple by the wrapper (trailing zeros contribute nothing to any
 real element's suffix).
+
+Masked-tail contract (ragged-N serving): the allocation service pads
+variable-N requests with zero-gain clients, so w = p·|h|² carries an
+all-zero tail BEFORE this wrapper adds its own block padding.  Both tails
+compose: a zero element adds exactly 0.0 to the carry and to every
+in-block matmul row, so s over the real prefix is bit-identical to the
+kernel run on the truncated exact-N input — in f32 this is exact
+(x + 0.0 == x), not approximate.  Asserted against ref and interpret
+modes in tests/test_sic.py::TestPaddedTail.
 """
 from __future__ import annotations
 

@@ -1,0 +1,330 @@
+"""Streaming allocation service: ragged-N continuous batching over the
+masked Stackelberg engine (the ISSUE-6 tentpole).
+
+The offline engine answers fixed-N, fixed-K questions; production is an
+*online* stream of heterogeneous cells — every request carries its own
+client count N, channel draws, and physics knobs, and clients join/drop
+between rounds so N never stays put.  Recompiling per N would burn ~1 s
+of XLA compile per distinct shape; this module instead routes requests
+through a SMALL FIXED SET of bucket executables:
+
+  * **N-buckets** — a request with n clients is padded up to the smallest
+    bucket width nb ≥ n (default widths 8/16/32/64/128) with ZERO channel
+    gains and an [nb] boolean mask.  Zero-gain padding is invisible to
+    the SIC chain by construction (p·|h|² = 0 in every suffix sum — see
+    ``repro.core.sic``), keeps the descending SIC order, and the mask
+    erases the padded lanes from d_hat, the latency maxima, the energy
+    sums and the feasibility test (``stackelberg._solve(mask=...)``), so
+    a padded solve is BIT-IDENTICAL to the exact-N solve.
+  * **request-batching** — up to ``max_batch`` same-bucket requests ride
+    one dispatch as a leading vmap axis; partial batches are topped up
+    with all-masked dummy rows so the executable's batch shape is fixed
+    (zero retraces over a warm stream, counted by
+    ``TRACE_COUNTS["serve_allocation"]``).  Per-request physics
+    (t_max / bandwidth / model_bits / …) stack into [B]-leaved
+    ``GamePhysics`` operands — heterogeneous cells share the executable.
+  * **double-buffered dispatch** — flushes enqueue asynchronously (JAX
+    async dispatch keeps the device busy) and block only when more than
+    ``max_inflight`` batches are outstanding, overlapping host-side
+    pack/unpack with device compute.  Operand buffers are donated to the
+    executable (the [B, nb] inputs are dead after dispatch and XLA may
+    reuse them for the outputs).
+
+One executable exists per (scheme, bucket width, batch width,
+dinkelbach_inner, sic_mode); ``warmup()`` pre-compiles the set so a
+latency-SLA deployment pays no cold-start on the stream.
+
+Results come back in the REQUEST'S OWN client order (the service sorts
+into SIC order on the way in and unsorts on the way out).
+
+Latency/throughput numbers for the mixed-N arrival trace live in
+``benchmarks/serve_latency.py`` (→ ``BENCH_serve.json``, gated by
+``scripts/check_bench.py``).
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Sequence
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.stackelberg import (GameConfig, _oma_body, _random_body, _solve,
+                                stack_physics)
+from ..core.tracking import TRACE_COUNTS
+
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128)
+SERVE_SCHEMES = ("proposed", "ideal", "wo_dt", "oma", "oma_tdma", "random")
+
+
+# ---------------------------------------------------------------------------
+# the bucket executable
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("scheme", "max_iter", "inner", "sic_mode"),
+         donate_argnums=(2, 3, 4, 5))
+def _serve_batch_jit(phys, keys, h2, D, v_max, eps, mask, tol, scheme,
+                     max_iter, inner, sic_mode):
+    """One padded bucket dispatch: B requests × nb client lanes.
+
+    phys  : GamePhysics with [B] leaves (per-request physics knobs)
+    keys  : [B, 2] PRNG keys (consumed by the "random" scheme only)
+    h2    : [B, nb] channel gains, each row descending with a zero tail
+    D     : [B, nb] data sizes (zero on padded lanes)
+    v_max : [B, nb] insensitive fractions (zero on padded lanes)
+    eps   : [B] per-request DT deviation
+    mask  : [B, nb] bool, True on real client lanes
+    tol   : Alg.-2 stopping tolerance (scalar operand)
+
+    Static keys: scheme / max_iter / inner / sic_mode (+ the B, nb
+    shapes).  Everything else — including every physics float — is a
+    traced operand, so one executable serves arbitrarily heterogeneous
+    cells.  The [B, nb] operand buffers (h2, D, v_max) and eps are
+    donated — dead after dispatch, XLA reuses them for the matching
+    [B, nb] outputs (p/q/f/alpha/rates) and the [B] scalars.  The
+    GamePhysics leaves stay undonated: only two [B] f32 outputs exist
+    to absorb eleven [B] leaves, and XLA warns on every unusable one.
+    """
+    TRACE_COUNTS["serve_allocation"] += 1
+
+    def one(ph, key, h2_r, d_r, vm_r, eps_r, m_r):
+        dtype = jnp.result_type(h2_r)
+        if scheme in ("proposed", "ideal"):
+            return _solve(ph, h2_r, d_r, vm_r, eps_r, max_iter, tol, inner,
+                          sic_mode, mask=m_r)
+        if scheme == "wo_dt":
+            return _solve(ph, h2_r, d_r, jnp.zeros_like(h2_r),
+                          jnp.zeros((), dtype), max_iter, tol, inner,
+                          sic_mode, mask=m_r)
+        if scheme == "oma":
+            return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner, tdma=False,
+                             mask=m_r)
+        if scheme == "oma_tdma":
+            return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner, tdma=True,
+                             mask=m_r)
+        if scheme == "random":
+            return _random_body(ph, key, h2_r, d_r, vm_r, eps_r, mask=m_r)
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    return jax.vmap(one)(phys, keys, h2, D, v_max, eps, mask)
+
+
+# ---------------------------------------------------------------------------
+# requests / results
+# ---------------------------------------------------------------------------
+@dataclass
+class AllocRequest:
+    """One cell's allocation question.  ``h2`` may arrive in ANY client
+    order — the service sorts into SIC order and unsorts the answer.
+    ``d`` / ``v_max`` are scalars or per-client [n] arrays aligned with
+    ``h2``'s order."""
+    h2: object
+    d: object = 200.0
+    v_max: object = 0.5
+    cfg: GameConfig = field(default_factory=GameConfig)
+    scheme: str = "proposed"
+    epsilon: float = 0.0
+    seed: int = 0              # per-request randomness ("random" scheme)
+
+
+@dataclass
+class AllocResult:
+    """Per-request allocation, in the request's own client order."""
+    rid: int
+    n: int
+    bucket: int
+    scheme: str
+    p: np.ndarray
+    q: np.ndarray
+    f: np.ndarray
+    alpha: np.ndarray
+    rates: np.ndarray
+    t_total: float
+    energy: float
+    feasible: bool
+    iterations: int
+    latency_s: float           # submit → result available on host
+
+
+@dataclass
+class _Pending:
+    rid: int
+    req: AllocRequest
+    n: int
+    order: np.ndarray          # SIC sort permutation of the request's h2
+    h2: np.ndarray             # [n] sorted descending
+    d: np.ndarray              # [n] aligned with h2
+    v_max: np.ndarray          # [n]
+    t_submit: float
+
+
+@dataclass
+class _InFlight:
+    key: tuple
+    pending: list               # the real _Pending rows (dummies excluded)
+    out: object                 # device Allocation, [B, nb] fields
+    t_dispatch: float
+
+
+class AllocationService:
+    """Continuous-batching scheduler over the masked bucket executables.
+
+    submit() enqueues (auto-flushing full batches), flush() force-packs
+    partial batches with dummy rows, drain() completes everything and
+    returns the accumulated ``AllocResult``s.  ``warmup()`` pre-compiles
+    the bucket set.  See the module docstring for the design.
+    """
+
+    def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 max_batch: int = 8, max_inflight: int = 2,
+                 max_iter: int = 20, tol: float = 1e-6):
+        if not buckets or any(b <= 0 for b in buckets):
+            raise ValueError(f"bad bucket widths {buckets}")
+        self.buckets = tuple(sorted(set(int(b) for b in buckets)))
+        self.max_batch = int(max_batch)
+        self.max_inflight = int(max_inflight)
+        self.max_iter = int(max_iter)
+        self.tol = float(tol)
+        self._next_rid = 0
+        self._pending: dict = collections.defaultdict(list)
+        self._inflight: collections.deque = collections.deque()
+        self._done: list = []
+        self.stats = collections.Counter()
+
+    # -- intake -------------------------------------------------------------
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"request with {n} clients exceeds the largest "
+                         f"bucket {self.buckets[-1]}; widen `buckets`")
+
+    def submit(self, req: AllocRequest) -> int:
+        """Enqueue one request; returns its rid.  Flushes the bucket as
+        soon as it holds ``max_batch`` requests."""
+        if req.scheme not in SERVE_SCHEMES:
+            raise ValueError(f"unknown scheme {req.scheme!r}; "
+                             f"expected one of {SERVE_SCHEMES}")
+        h2 = np.asarray(req.h2, np.float32).reshape(-1)
+        n = h2.shape[0]
+        if n == 0:
+            raise ValueError("empty request (0 clients)")
+        nb = self.bucket_for(n)
+        order = np.argsort(-h2, kind="stable")      # SIC decode order
+        d = np.broadcast_to(np.asarray(req.d, np.float32), (n,))[order]
+        vm = np.broadcast_to(np.asarray(req.v_max, np.float32), (n,))[order]
+        rid = self._next_rid
+        self._next_rid += 1
+        key = (nb, req.scheme, req.cfg.dinkelbach_inner, req.cfg.sic_mode)
+        self._pending[key].append(_Pending(
+            rid=rid, req=req, n=n, order=order, h2=h2[order], d=d, v_max=vm,
+            t_submit=time.perf_counter()))
+        self.stats["submitted"] += 1
+        if len(self._pending[key]) >= self.max_batch:
+            self._flush_key(key)
+        return rid
+
+    # -- dispatch -----------------------------------------------------------
+    def _flush_key(self, key: tuple) -> None:
+        rows = self._pending.pop(key, [])
+        if not rows:
+            return
+        nb, scheme, inner, sic_mode = key
+        b = self.max_batch                      # fixed batch width per
+        n_real = len(rows)                      # executable (zero retraces)
+        h2 = np.zeros((b, nb), np.float32)
+        D = np.zeros((b, nb), np.float32)
+        vm = np.zeros((b, nb), np.float32)
+        mask = np.zeros((b, nb), bool)
+        eps = np.zeros((b,), np.float32)
+        for i, r in enumerate(rows):
+            h2[i, :r.n] = r.h2
+            D[i, :r.n] = r.d
+            vm[i, :r.n] = r.v_max
+            mask[i, :r.n] = True
+            eps[i] = r.req.epsilon
+        # dummy rows reuse the first request's physics (masked out anyway)
+        cfgs = [r.req.cfg for r in rows] + [rows[0].req.cfg] * (b - n_real)
+        phys = stack_physics(cfgs)
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(
+            [r.req.seed for r in rows] + [0] * (b - n_real), jnp.uint32))
+        out = _serve_batch_jit(phys, keys, h2, D, vm, eps, mask,
+                               jnp.asarray(self.tol, jnp.float32),
+                               scheme=scheme, max_iter=self.max_iter,
+                               inner=inner, sic_mode=sic_mode)
+        self._inflight.append(_InFlight(key=key, pending=rows, out=out,
+                                        t_dispatch=time.perf_counter()))
+        self.stats["dispatches"] += 1
+        self.stats["padded_slots"] += b - n_real
+        while len(self._inflight) > self.max_inflight:
+            self._complete(self._inflight.popleft())
+
+    def flush(self) -> None:
+        """Dispatch every partial batch (dummy-padded to the fixed width)."""
+        for key in sorted(self._pending.keys()):
+            self._flush_key(key)
+
+    # -- completion ---------------------------------------------------------
+    def _complete(self, inf: _InFlight) -> None:
+        out = jax.block_until_ready(inf.out)
+        nb = inf.key[0]
+        host = {f: np.asarray(getattr(out, f))
+                for f in ("p", "q", "f", "alpha", "rates", "t_total",
+                          "energy", "feasible", "iterations")}
+        now = time.perf_counter()
+        for i, r in enumerate(inf.pending):
+            if r.rid < 0:              # warmup probe row — not a user request
+                continue
+            inv = np.empty_like(r.order)
+            inv[r.order] = np.arange(r.n)        # SIC order → request order
+            unsort = lambda a: np.ascontiguousarray(a[i, :r.n][inv])
+            self._done.append(AllocResult(
+                rid=r.rid, n=r.n, bucket=nb, scheme=r.req.scheme,
+                p=unsort(host["p"]), q=unsort(host["q"]),
+                f=unsort(host["f"]), alpha=unsort(host["alpha"]),
+                rates=unsort(host["rates"]),
+                t_total=float(host["t_total"][i]),
+                energy=float(host["energy"][i]),
+                feasible=bool(host["feasible"][i]),
+                iterations=int(host["iterations"][i]),
+                latency_s=now - r.t_submit))
+            self.stats["completed"] += 1
+
+    def drain(self) -> list:
+        """Flush all partial batches, retire all in-flight dispatches, and
+        return every accumulated result (submit order not guaranteed —
+        order by ``rid`` for a stable view)."""
+        self.flush()
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        done, self._done = self._done, []
+        return done
+
+    # -- pre-compilation ----------------------------------------------------
+    def warmup(self, schemes: Sequence[str] = ("proposed",),
+               cfg: GameConfig | None = None) -> float:
+        """Compile every (bucket, scheme) executable with an all-dummy
+        batch; returns the wall seconds spent (the cold-start tax a warm
+        deployment never pays on the stream)."""
+        cfg = cfg or GameConfig()
+        t0 = time.perf_counter()
+        for scheme in schemes:
+            for nb in self.buckets:
+                key = (nb, scheme, cfg.dinkelbach_inner, cfg.sic_mode)
+                row = _Pending(rid=-1, req=AllocRequest(h2=np.ones(1),
+                                                        cfg=cfg,
+                                                        scheme=scheme),
+                               n=1, order=np.zeros(1, np.int64),
+                               h2=np.ones(1, np.float32),
+                               d=np.zeros(1, np.float32),
+                               v_max=np.zeros(1, np.float32),
+                               t_submit=time.perf_counter())
+                self._pending[key] = [row]
+                self._flush_key(key)
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        return time.perf_counter() - t0

@@ -23,6 +23,11 @@ def generate(cfg, params, prompt, max_seq: int, gen: int, greedy=True,
 
     prime="prefill" runs the one-pass cache-collecting prefill;
     prime="steps" replays the prompt through decode_step (reference path).
+    Both prime paths feed the decode loop last-position logits of rank 2
+    ([B, V]); a [B, 1, V] rank from a priming path would otherwise make
+    ``argmax(...)[:, None]`` produce [B, 1, 1] next-tokens and break the
+    concatenate against [B, P] — normalized once below so the two paths
+    stay shape-identical (parity: tests/test_serve_generate.py).
     """
     b, plen = prompt.shape
     step = jax.jit(make_serve_step(cfg), donate_argnums=(2,))
@@ -36,6 +41,8 @@ def generate(cfg, params, prompt, max_seq: int, gen: int, greedy=True,
         logits = None
         for t in range(plen):        # prime the cache token by token
             logits, caches = step(params, toks[:, t:t + 1], caches)
+    if logits.ndim == 3:             # [B, 1, V] → [B, V] (see docstring)
+        logits = logits[:, -1, :]
     for t in range(gen):
         if greedy or key is None:
             nxt = jnp.argmax(logits, axis=-1)[:, None]

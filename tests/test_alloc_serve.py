@@ -1,0 +1,192 @@
+"""Ragged-N streaming allocation service: padded-bucket parity + scheduler.
+
+The serving contract (ISSUE 6 tentpole): a request solved inside a padded
+bucket must MATCH the exact-N solve — same p/q/f/latency/energy within the
+repo's 1e-5 relative budget (empirically the masked path is bitwise equal:
+zero-gain tails are invisible to every suffix sum and the mask erases the
+padded lanes from every reduction) — and a mixed-N stream over warm buckets
+must trigger ZERO retraces (TRACE_COUNTS["serve_allocation"]).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.fl_round import allocate_batched
+from repro.core.stackelberg import GameConfig
+from repro.core.tracking import TRACE_COUNTS
+from repro.launch.alloc_serve import (DEFAULT_BUCKETS, AllocationService,
+                                      AllocRequest)
+
+REL = 1e-5
+D_BITS, V_MAX, EPS = 200.0, 0.5, 0.05
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b) / np.maximum(np.abs(b), 1e-12)))
+
+
+def _draw(n, seed):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.2, 2.0, n).astype(np.float32)
+
+
+def _exact(cfg, h2, scheme="proposed"):
+    """Exact-N oracle via the batched engine (already parity-locked to the
+    scalar solver in tests/test_equilibrium_batched.py)."""
+    order = np.argsort(-h2, kind="stable")
+    n = h2.shape[0]
+    out = allocate_batched(
+        scheme, cfg, jnp.asarray(h2[order])[None, :],
+        jnp.full((1, n), D_BITS, jnp.float32),
+        jnp.full((1, n), V_MAX, jnp.float32), epsilon=EPS)
+    inv = np.empty_like(order)
+    inv[order] = np.arange(n)
+    per = {f: np.asarray(getattr(out, f))[0][inv]
+           for f in ("p", "q", "f", "alpha", "rates")}
+    return per, out
+
+
+def _serve_one(h2, scheme, cfg, buckets=(8, 16), max_batch=2):
+    svc = AllocationService(buckets=buckets, max_batch=max_batch)
+    svc.submit(AllocRequest(h2=h2, d=D_BITS, v_max=V_MAX, cfg=cfg,
+                            scheme=scheme, epsilon=EPS))
+    (res,) = svc.drain()
+    return res
+
+
+class TestPaddedParity:
+    """Padded-bucket solve == exact-N solve, across schemes and sic modes."""
+
+    @pytest.mark.parametrize("scheme", ["proposed", "ideal", "wo_dt",
+                                        "oma", "oma_tdma"])
+    def test_scheme_parity(self, scheme):
+        h2 = _draw(5, seed=3)                      # n=5 inside bucket 8
+        cfg = GameConfig()
+        res = _serve_one(h2, scheme, cfg)
+        per, out = _exact(cfg, h2, scheme=scheme)
+        for f in ("p", "q", "f", "alpha", "rates"):
+            assert _rel(getattr(res, f), per[f]) <= REL, f
+        assert _rel(res.t_total, out.t_total[0]) <= REL
+        assert _rel(res.energy, out.energy[0]) <= REL
+        assert res.feasible == bool(out.feasible[0])
+
+    @pytest.mark.parametrize("sic_mode", ["sequential", "blocked",
+                                          "blocked_interpret"])
+    def test_sic_mode_parity(self, sic_mode):
+        h2 = _draw(11, seed=7)                     # n=11 inside bucket 16
+        cfg = GameConfig(sic_mode=sic_mode)
+        res = _serve_one(h2, "proposed", cfg)
+        per, out = _exact(cfg, h2)
+        for f in ("p", "q", "f"):
+            assert _rel(getattr(res, f), per[f]) <= REL, f
+        assert _rel(res.t_total, out.t_total[0]) <= REL
+        assert _rel(res.energy, out.energy[0]) <= REL
+
+    def test_n1_smallest_bucket(self):
+        """N=1 rides the smallest bucket with 7 padded lanes — the edge the
+        service's smallest bucket surfaces (ISSUE satellite 3)."""
+        h2 = _draw(1, seed=11)
+        cfg = GameConfig()
+        res = _serve_one(h2, "proposed", cfg)
+        per, out = _exact(cfg, h2)
+        assert res.bucket == 8 and res.n == 1
+        assert _rel(res.p, per["p"]) <= REL
+        assert _rel(res.energy, out.energy[0]) <= REL
+        assert np.isfinite(res.t_total) and np.isfinite(res.energy)
+
+    def test_original_order_restored(self):
+        """h2 submitted in ascending (anti-SIC) order comes back aligned
+        with the request's own client indexing."""
+        h2 = np.sort(_draw(6, seed=5))             # ascending on purpose
+        cfg = GameConfig()
+        res = _serve_one(h2, "proposed", cfg)
+        per, _ = _exact(cfg, h2)
+        # per-client parity in the REQUEST's order is the proof: rates are
+        # channel-dependent, so a wrong unsort permutation cannot match
+        assert _rel(res.p, per["p"]) <= REL
+        assert _rel(res.rates, per["rates"]) <= REL
+        assert _rel(res.alpha, per["alpha"]) <= REL
+
+    def test_heterogeneous_physics_one_batch(self):
+        """Two requests with different t_max/bandwidth share one dispatch
+        and each matches its own exact solve."""
+        cfg_a = GameConfig(t_max=1.0)
+        cfg_b = GameConfig(t_max=2.5, bandwidth=2e6)
+        h2a, h2b = _draw(4, seed=21), _draw(6, seed=22)
+        svc = AllocationService(buckets=(8,), max_batch=2)
+        ra = svc.submit(AllocRequest(h2=h2a, cfg=cfg_a, epsilon=EPS))
+        rb = svc.submit(AllocRequest(h2=h2b, cfg=cfg_b, epsilon=EPS))
+        res = {r.rid: r for r in svc.drain()}
+        assert svc.stats["dispatches"] == 1        # one shared batch
+        for rid, cfg, h2 in ((ra, cfg_a, h2a), (rb, cfg_b, h2b)):
+            per, out = _exact(cfg, h2)
+            assert _rel(res[rid].p, per["p"]) <= REL
+            assert _rel(res[rid].energy, out.energy[0]) <= REL
+
+    def test_random_scheme_in_box(self):
+        """The random baseline's draws stay inside the physics box even
+        through the padded path (distributional scheme — no bitwise
+        oracle, bucket-shaped draws differ from exact-N draws)."""
+        h2 = _draw(5, seed=9)
+        cfg = GameConfig()
+        res = _serve_one(h2, "random", cfg)
+        assert np.all(res.p >= cfg.p_min - 1e-9)
+        assert np.all(res.p <= cfg.p_max + 1e-9)
+        assert np.all(res.f <= cfg.f_max + 1e-6)
+        assert np.isfinite(res.energy) and np.isfinite(res.t_total)
+
+
+class TestScheduler:
+    def test_zero_retrace_mixed_stream(self):
+        """50-request mixed-N stream over warm buckets: ZERO retraces
+        (the ISSUE acceptance criterion)."""
+        svc = AllocationService(buckets=(8, 16), max_batch=4)
+        svc.warmup(schemes=("proposed",))
+        before = TRACE_COUNTS["serve_allocation"]
+        rng = np.random.default_rng(0)
+        for i in range(50):
+            n = int(rng.integers(1, 17))
+            svc.submit(AllocRequest(h2=_draw(n, seed=100 + i), epsilon=EPS))
+        res = svc.drain()
+        assert len(res) == 50
+        assert TRACE_COUNTS["serve_allocation"] == before  # zero retraces
+        assert all(np.isfinite(r.energy) and np.isfinite(r.t_total)
+                   for r in res)
+
+    def test_partial_batch_dummy_rows_finite(self):
+        """A lone request padded with all-masked dummy rows must not be
+        poisoned by them (the follower_alpha 0/0 guard regression)."""
+        svc = AllocationService(buckets=(8,), max_batch=4)
+        svc.submit(AllocRequest(h2=_draw(3, seed=1), epsilon=EPS))
+        (res,) = svc.drain()
+        assert svc.stats["padded_slots"] == 3
+        assert np.all(np.isfinite(res.p)) and np.isfinite(res.energy)
+
+    def test_bucket_routing_and_overflow(self):
+        svc = AllocationService(buckets=DEFAULT_BUCKETS)
+        assert svc.bucket_for(1) == 8
+        assert svc.bucket_for(8) == 8
+        assert svc.bucket_for(9) == 16
+        assert svc.bucket_for(128) == 128
+        with pytest.raises(ValueError, match="exceeds the largest bucket"):
+            svc.bucket_for(129)
+        with pytest.raises(ValueError, match="unknown scheme"):
+            svc.submit(AllocRequest(h2=np.ones(3), scheme="nope"))
+        with pytest.raises(ValueError, match="0 clients"):
+            svc.submit(AllocRequest(h2=np.ones(0)))
+
+    def test_full_batch_autoflush(self):
+        svc = AllocationService(buckets=(8,), max_batch=2)
+        svc.submit(AllocRequest(h2=_draw(3, seed=1)))
+        assert svc.stats["dispatches"] == 0
+        svc.submit(AllocRequest(h2=_draw(4, seed=2)))
+        assert svc.stats["dispatches"] == 1        # auto-flushed when full
+        assert len(svc.drain()) == 2
+
+    def test_latency_recorded(self):
+        svc = AllocationService(buckets=(8,))
+        svc.submit(AllocRequest(h2=_draw(4, seed=2)))
+        (res,) = svc.drain()
+        assert res.latency_s > 0.0

@@ -1,0 +1,83 @@
+"""``scripts/check_bench.py`` gate semantics — the corrupt-JSON regression.
+
+A half-written bench JSON (killed bench run) used to raise an unhandled
+``json.JSONDecodeError`` and crash the gate; the fix reports the reason and
+FAILS that bench explicitly (exit 1) — a corrupt bench must not exit 0 via
+the missing-file SKIP path either.  Also pins the surrounding contract:
+missing file still SKIPs, and a regressed rate still fails.
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "check_bench",
+    os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                 "check_bench.py"))
+check_bench = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(check_bench)
+
+
+@pytest.fixture
+def fake_repo(tmp_path, monkeypatch):
+    """Point the gate at a temp repo root with a stubbed committed
+    baseline, so tests control both sides of the comparison."""
+    monkeypatch.setattr(check_bench, "REPO_ROOT", str(tmp_path))
+    baselines = {}
+    monkeypatch.setattr(check_bench, "_load_committed",
+                        lambda name: baselines.get(name))
+    return tmp_path, baselines
+
+
+def _write(root, name, text):
+    (root / name).write_text(text)
+
+
+def test_corrupt_current_json_fails_explicitly(fake_repo, capsys):
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", '{"requests_per_sec": 10')  # truncated
+    assert check_bench.check() == 1
+    out = capsys.readouterr().out
+    assert "CORRUPT" in out and "JSONDecodeError" in out
+    assert "BENCH_serve.json:corrupt" in out
+    assert "SKIP" not in [l.strip().split()[0] for l in out.splitlines()
+                          if "BENCH_serve" in l]
+
+
+def test_corrupt_fails_even_without_baseline(fake_repo):
+    """No committed baseline would normally SKIP — but a corrupt current
+    file must still fail (the bug was exactly this silent path)."""
+    root, _ = fake_repo
+    _write(root, "BENCH_equilibrium.json", "not json at all {{{")
+    assert check_bench.check(verbose=False) == 1
+
+
+def test_missing_file_still_skips(fake_repo, capsys):
+    assert check_bench.check() == 0
+    assert "SKIP" in capsys.readouterr().out
+
+
+def test_regression_still_fails(fake_repo):
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", json.dumps({"requests_per_sec": 50.0}))
+    assert check_bench.check(verbose=False) == 1
+
+
+def test_within_tolerance_passes(fake_repo):
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", json.dumps({"requests_per_sec": 90.0}))
+    assert check_bench.check(verbose=False) == 0
+
+
+def test_missing_gated_metric_fails(fake_repo):
+    """A rate the baseline tracks but the current file lost must gate."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", json.dumps({"note": "no rate"}))
+    assert check_bench.check(verbose=False) == 1

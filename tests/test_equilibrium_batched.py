@@ -130,3 +130,66 @@ def test_allocation_is_pytree():
 
     a = equilibrium(CFG, h2, d, vmax)
     assert float(energy_of(a)) == pytest.approx(float(a.energy))
+
+
+# ---------------------------------------------------------------------------
+# (h) N=1 / degenerate-input regressions (ISSUE 6 satellite — the edges the
+#     serving layer's smallest bucket and dummy batch-padding rows surface)
+# ---------------------------------------------------------------------------
+def test_n1_batched_both_sic_modes():
+    """N=1: no later-decoded clients, interference 0.  Both SIC engines
+    must agree with each other and stay finite."""
+    h2, d, vmax = _draw(7, n=1)
+    outs = {}
+    for mode in ("sequential", "blocked"):
+        cfg = GameConfig(sic_mode=mode)
+        a = batched_equilibrium(cfg, h2[None, :], d[None, :], vmax[None, :])
+        assert all(bool(jnp.all(jnp.isfinite(getattr(a, f))))
+                   for f in ("p", "q", "f", "alpha", "energy", "t_total")), \
+            mode
+        outs[mode] = a
+    for f in ("p", "q", "f", "energy", "t_total"):
+        a = jnp.asarray(getattr(outs["sequential"], f))
+        b = jnp.asarray(getattr(outs["blocked"], f))
+        assert float(jnp.max(jnp.abs(a - b) /
+                             jnp.maximum(jnp.abs(a), 1e-12))) <= REL, f
+
+
+@pytest.mark.parametrize("sic_mode", ["sequential", "blocked"])
+def test_all_infeasible_batch_finite(sic_mode):
+    """An impossibly tight deadline makes EVERY draw infeasible: the
+    best-iterate safeguard must still hand back finite allocations with
+    feasible=False everywhere — no nan/inf leaks through the
+    lexicographic (infeasible, energy) selection."""
+    h2b, db, vmb = _batch(3)
+    cfg = GameConfig(t_max=1e-3, sic_mode=sic_mode)
+    a = batched_equilibrium(cfg, h2b, db, vmb)
+    assert not bool(jnp.any(a.feasible))
+    for f in ("p", "q", "f", "alpha", "rates", "energy", "t_total"):
+        assert bool(jnp.all(jnp.isfinite(getattr(a, f)))), f
+
+
+def test_zero_channel_row_finite():
+    """A dead-channel draw (all gains 0 — the service's all-masked dummy
+    row without the mask) must not poison the batch: rates clamp at the
+    1e-9 floor, latencies are huge but finite, energies finite."""
+    h2b, db, vmb = _batch(2)
+    h2b = h2b.at[1].set(0.0)
+    a = batched_equilibrium(GameConfig(), h2b, db, vmb)
+    for f in ("p", "q", "f", "alpha", "energy", "t_total"):
+        assert bool(jnp.all(jnp.isfinite(getattr(a, f)))), f
+    # the healthy row is untouched by its dead neighbour
+    solo = batched_equilibrium(GameConfig(), h2b[:1], db[:1], vmb[:1])
+    assert float(jnp.abs(a.energy[0] - solo.energy[0])) <= \
+        REL * max(float(jnp.abs(solo.energy[0])), 1e-12)
+
+
+def test_follower_alpha_all_masked_guard():
+    """Regression for the Eq.-26 0/0: with load = 0 and t_total = 0 (an
+    all-masked dummy row) follower_alpha used to return NaN; the 1e-12
+    denominator floor pins it at 0."""
+    from repro.core.stackelberg import follower_alpha
+    alpha, t_s = follower_alpha(jnp.zeros(4), jnp.zeros(4),
+                                jnp.zeros(()), jnp.asarray(1e9))
+    assert bool(jnp.all(jnp.isfinite(alpha))) and bool(jnp.isfinite(t_s))
+    assert bool(jnp.all(alpha == 0.0))

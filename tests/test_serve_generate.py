@@ -1,0 +1,64 @@
+"""``launch.serve.generate``: prefill-priming vs step-priming parity.
+
+The serving driver has two prompt-priming paths — ``prime="prefill"`` (the
+one-pass cache-collecting prefill) and ``prime="steps"`` (the token-by-token
+decode_step replay).  Both must hand the decode loop last-position logits of
+the SAME rank ([B, V]) so the greedy/categorical ``[:, None]`` expansion and
+the token concatenate behave identically — the ISSUE-6 satellite pins this
+contract with full-sequence greedy parity on tiny dense and SSM configs
+(``generate`` normalizes a rank-3 [B, 1, V] defensively; see its docstring).
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.serve import generate
+from repro.models import init_params
+
+
+def _setup(arch, b=2, plen=8):
+    cfg = smoke_variant(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    prompt = jax.random.randint(jax.random.fold_in(key, 1),
+                                (b, plen), 0, cfg.vocab_size)
+    return cfg, params, prompt
+
+
+@pytest.mark.parametrize("arch", ["gemma2-9b", "mamba2-2.7b"])
+def test_prefill_vs_steps_token_parity(arch):
+    """Greedy generation must produce IDENTICAL token sequences whichever
+    priming path ran (same caches, same logits rank into the decode loop)."""
+    cfg, params, prompt = _setup(arch)
+    gen, max_seq = 6, prompt.shape[1] + 8
+    t_pf = generate(cfg, params, prompt, max_seq, gen, prime="prefill")
+    t_st = generate(cfg, params, prompt, max_seq, gen, prime="steps")
+    assert t_pf.shape == t_st.shape == (2, prompt.shape[1] + gen)
+    assert t_pf.dtype == jnp.int32
+    assert bool(jnp.all(t_pf[:, :prompt.shape[1]] == prompt))
+    assert bool(jnp.all(t_pf == t_st))
+
+
+def test_rank3_logits_normalized():
+    """A priming path that yields [B, 1, V] logits must still decode
+    correctly — generate's rank normalization squeezes the sequence axis
+    before the loop (the exact failure mode the satellite describes)."""
+    cfg, params, prompt = _setup("gemma2-9b")
+    gen, max_seq = 4, prompt.shape[1] + 6
+    ref = generate(cfg, params, prompt, max_seq, gen, prime="steps")
+
+    import repro.launch.serve as serve_mod
+    orig = serve_mod.prefill_with_caches
+
+    def rank3_prefill(params, batch, cfg, max_seq):
+        logits, caches = orig(params, batch, cfg, max_seq)
+        return logits[:, None, :], caches          # [B, V] -> [B, 1, V]
+
+    serve_mod.prefill_with_caches = rank3_prefill
+    try:
+        toks = generate(cfg, params, prompt, max_seq, gen, prime="prefill")
+    finally:
+        serve_mod.prefill_with_caches = orig
+    assert toks.shape == (2, prompt.shape[1] + gen)
+    assert bool(jnp.all(toks == ref))

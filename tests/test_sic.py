@@ -329,3 +329,74 @@ def test_dinkelbach_trace_path_matches_while_loop(d, g, log_f):
     assert int(it_w) == int(it_t)
     assert trace[0] == 0.0 and len(trace) == it_t + 1
     assert abs(trace[-1] - float(q_t)) <= 1e-6 * max(abs(float(q_t)), 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# padded (masked) tails — the ragged-N serving contract (ISSUE 6)
+# ---------------------------------------------------------------------------
+class TestPaddedTail:
+    """The allocation service pads variable-N cells with ZERO channel gains
+    at the SIC-order tail; both power engines and the suffix kernel must be
+    invariant to such tails (see the contract in repro/core/sic.py)."""
+
+    @pytest.mark.parametrize("pad", [1, 3, 11])
+    def test_sequential_zero_tail_parity(self, pad):
+        h2, g = _sic_inputs(5, seed=2)
+        p, q = successive_power(h2, 200.0, g, BW, SIGMA2, P_MIN, P_MAX)
+        h2p = jnp.concatenate([h2, jnp.zeros(pad)])
+        gp = jnp.concatenate([g, jnp.zeros(pad)])
+        pp, qp = successive_power(h2p, 200.0, gp, BW, SIGMA2, P_MIN, P_MAX)
+        assert _rel(pp[:5], p) <= REL and _rel(qp[:5], q) <= REL
+        # padded lanes themselves stay finite: F=0 -> rate-floor power hits
+        # +inf and clips to the box top, q collapses to 0
+        assert bool(jnp.all(pp[5:] == P_MAX)) and bool(jnp.all(qp[5:] == 0.0))
+
+    @pytest.mark.parametrize("suffix_mode", ["ref", "interpret"])
+    def test_blocked_zero_tail_parity(self, suffix_mode):
+        h2, g = _sic_inputs(6, seed=4)
+        p, q = successive_power_blocked(h2, 200.0, g, BW, SIGMA2, P_MIN,
+                                        P_MAX, suffix_mode=suffix_mode)
+        h2p = jnp.concatenate([h2, jnp.zeros(10)])
+        gp = jnp.concatenate([g, jnp.zeros(10)])
+        pp, qp = successive_power_blocked(h2p, 200.0, gp, BW, SIGMA2, P_MIN,
+                                          P_MAX, suffix_mode=suffix_mode)
+        assert _rel(pp[:6], p) <= REL and _rel(qp[:6], q) <= REL
+        assert bool(jnp.all(jnp.isfinite(pp))) and \
+            bool(jnp.all(jnp.isfinite(qp)))
+
+    @pytest.mark.parametrize("mode", ["ref", "interpret"])
+    def test_suffix_scan_zero_tail_parity(self, mode):
+        """A zero tail must not perturb any real element's suffix sum.
+        The Pallas kernel walks blocks sequentially with a scalar carry, so
+        zero blocks add exactly 0.0 (bitwise); the jnp oracle's cumsum is
+        an XLA associative tree whose shape changes with padding, so it
+        gets the repo's 1e-5 relative budget instead."""
+        w = jax.random.uniform(jax.random.PRNGKey(3), (4, 37))
+        wp = jnp.pad(w, ((0, 0), (0, 91)))         # 37 -> 128 (block edge)
+        s = sic_suffix_sum(w, mode=mode, block=32)
+        sp = sic_suffix_sum(wp, mode=mode, block=32)
+        if mode == "interpret":
+            assert bool(jnp.all(sp[:, :37] == s))   # bitwise, not approx
+        else:
+            assert _rel(sp[:, :37], s) <= REL
+        assert bool(jnp.all(sp[:, 37:] == 0.0))
+
+    def test_n1_both_engines(self):
+        """N=1 — the service's smallest-bucket edge: no later-decoded
+        clients, interference 0, both engines finite and equal."""
+        h2, g = _sic_inputs(1, seed=8)
+        p_s, q_s = successive_power(h2, 200.0, g, BW, SIGMA2, P_MIN, P_MAX)
+        p_b, q_b = successive_power_blocked(h2, 200.0, g, BW, SIGMA2,
+                                            P_MIN, P_MAX)
+        assert _rel(p_b, p_s) <= REL and _rel(q_b, q_s) <= REL
+        assert bool(jnp.all(jnp.isfinite(p_s))) and \
+            bool(jnp.all(jnp.isfinite(q_s)))
+
+    def test_all_zero_gains_finite(self):
+        """Degenerate all-masked lane set (a dummy batch-padding row):
+        every power pins at the box top, q at 0, nothing NaN."""
+        z = jnp.zeros(8)
+        for fn in (successive_power,
+                   lambda *a, **k: successive_power_blocked(*a, **k)):
+            p, q = fn(z, 200.0, jnp.zeros(8), BW, SIGMA2, P_MIN, P_MAX)
+            assert bool(jnp.all(p == P_MAX)) and bool(jnp.all(q == 0.0))
