@@ -23,7 +23,7 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
-          "equilibrium", "training")
+          "equilibrium", "training", "robustness")
 
 
 def main() -> None:
@@ -61,6 +61,8 @@ def main() -> None:
                 from . import equilibrium_throughput as mod
             elif suite == "training":
                 from . import training_throughput as mod
+            elif suite == "robustness":
+                from . import robustness_grid as mod
             else:
                 from . import kernels_microbench as mod
             for name, us, derived in mod.run():

@@ -19,16 +19,34 @@ Tracked bench files and their gated metrics (higher is better):
         trace (``benchmarks/serve_latency.py``; p50/p99 latencies are
         recorded there but not gated — wall-clock percentiles on shared
         CI hosts are too noisy for a hard gate).
+  * ``BENCH_robustness.json``
+      - ``grid_rounds_per_sec``        — the attack-vs-defense grid
+        (``benchmarks/robustness_grid.py``) as sharded sweep dispatches;
+      - plus the CLAIMS gate: every boolean under the file's ``claims``
+        object must be true — a robustness headline (e.g. "the defended
+        scheme stays within 5 pts of clean under the adaptive attacker")
+        that stops holding fails the gate even if throughput is fine.
     (The host-loop baseline tiers are recorded but not gated — they are
     the slow references, and their host-side dispatch overhead is the
     noisiest number in the file.)
 
+Tolerance: the default gate is a >20% drop.  A bench file may override
+per metric via a top-level ``"tolerances": {"<label>": 0.35, ...}``
+object (this container's timing noise is recorded at ±30% — see
+CHANGES.md PR 4 note); the current file's override wins, then the
+committed baseline's, then the default.  ``check(remeasure=..., k=...)``
+takes a best-of-k re-measure hook: when a metric would fail, the hook is
+asked for up to k−1 fresh measurements of that bench and the BEST value
+per metric is gated — a transient scheduler stall on a shared host
+should not fail a real gate.
+
 Exit code 0 = pass (or nothing to compare: missing file, no git baseline,
 or the baseline predates a metric).  Exit 1 = a gated metric regressed
->20% — or vanished from the current file while the baseline tracks it
-(a bench that silently stops reporting a rate must not pass the gate) —
-or the current file is corrupt (a half-written JSON from a killed bench
-run FAILS that bench explicitly; it must not exit 0 via the SKIP path).
+past tolerance — or vanished from the current file while the baseline
+tracks it (a bench that silently stops reporting a rate must not pass
+the gate) — or a ``claims`` boolean is false — or the current file is
+corrupt (a half-written JSON from a killed bench run FAILS that bench
+explicitly; it must not exit 0 via the SKIP path).
 Run directly or let ``scripts/dev_smoke.py`` invoke it.
 """
 from __future__ import annotations
@@ -39,7 +57,7 @@ import subprocess
 import sys
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-TOLERANCE = 0.20          # >20% drop in a gated rate fails the gate
+TOLERANCE = 0.20          # default: >20% drop in a gated rate fails
 
 
 def _equilibrium_metrics(doc) -> dict:
@@ -77,10 +95,18 @@ def _serve_metrics(doc) -> dict:
     return out
 
 
+def _robustness_metrics(doc) -> dict:
+    out = {}
+    if doc.get("grid_rounds_per_sec") is not None:
+        out["grid_rounds_per_sec"] = float(doc["grid_rounds_per_sec"])
+    return out
+
+
 BENCHES = (
     ("BENCH_equilibrium.json", _equilibrium_metrics),
     ("BENCH_training.json", _training_metrics),
     ("BENCH_serve.json", _serve_metrics),
+    ("BENCH_robustness.json", _robustness_metrics),
 )
 
 # sentinel for "file exists but is unreadable" — distinct from None
@@ -117,9 +143,39 @@ def _load_committed(name: str):
         return None
 
 
-def _check_one(name: str, metrics_fn):
+def _tolerance_for(label: str, cur, ref) -> float:
+    """Per-metric tolerance: the current file's ``tolerances`` object wins,
+    then the committed baseline's, then the −20% default.  Values are
+    fractional drops (0.35 = a 35% drop still passes)."""
+    for doc in (cur, ref):
+        tol = (doc.get("tolerances") or {}).get(label) if doc else None
+        if tol is not None:
+            return float(tol)
+    return TOLERANCE
+
+
+def _check_claims(cur) -> tuple:
+    """Gate the bench file's own headline claims: every boolean under the
+    top-level ``claims`` object must be true.  Non-boolean entries are
+    recorded context (measured margins etc.), not gates."""
+    failures, lines = [], []
+    for label, val in sorted((cur.get("claims") or {}).items()):
+        if not isinstance(val, bool):
+            continue
+        lines.append(f"  claim {label}: {'holds' if val else 'VIOLATED'}")
+        if not val:
+            failures.append(label)
+    return failures, lines
+
+
+def _check_one(name: str, metrics_fn, remeasure=None, k: int = 2):
     """Returns (failures, lines) for one bench file; skips when the file or
-    its committed baseline is absent."""
+    its committed baseline is absent.
+
+    ``remeasure`` (optional callable ``name -> fresh doc | None``) is the
+    best-of-k hook: when a metric would fail, the bench is re-measured up
+    to ``k - 1`` more times and the BEST value per metric is gated, so a
+    one-off scheduler stall on a noisy shared host doesn't hard-fail."""
     cur, ref = _load_current(name), _load_committed(name)
     if isinstance(cur, _Corrupt):
         return ([f"{name}:corrupt"],
@@ -129,9 +185,36 @@ def _check_one(name: str, metrics_fn):
               f"no committed baseline for {name} (git show failed)"
         return [], [f"  SKIP ({why})"]
     cur_m, ref_m = metrics_fn(cur), metrics_fn(ref)
+
+    def failing_labels(m):
+        bad = []
+        for label, ref_val in ref_m.items():
+            val = m.get(label)
+            tol = _tolerance_for(label, cur, ref)
+            if val is None or val / max(ref_val, 1e-9) < 1.0 - tol:
+                bad.append(label)
+        return bad
+
+    remeasured = 0
+    while remeasure is not None and failing_labels(cur_m) \
+            and remeasured < k - 1:
+        fresh = remeasure(name)
+        remeasured += 1
+        if fresh is None:
+            break
+        fresh_m = metrics_fn(fresh)
+        cur_m = {label: max(v for v in (cur_m.get(label),
+                                        fresh_m.get(label))
+                            if v is not None)
+                 for label in set(cur_m) | set(fresh_m)}
+
     failures, lines = [], []
+    if remeasured:
+        lines.append(f"  (re-measured {remeasured}x, best-of-"
+                     f"{remeasured + 1} gated)")
     for label, ref_val in sorted(ref_m.items()):
         cur_val = cur_m.get(label)
+        tol = _tolerance_for(label, cur, ref)
         if cur_val is None:
             # a gated metric the baseline tracks but the current file lost
             # IS a failure — silently un-gating it would let a broken bench
@@ -141,29 +224,34 @@ def _check_one(name: str, metrics_fn):
             failures.append(f"{name}:{label}")
             continue
         ratio = cur_val / max(ref_val, 1e-9)
-        status = "ok" if ratio >= 1.0 - TOLERANCE else "REGRESSED"
+        status = "ok" if ratio >= 1.0 - tol else "REGRESSED"
         lines.append(f"  {label}: {cur_val:.0f}/s vs baseline "
-                     f"{ref_val:.0f}/s ({ratio:.2f}x) {status}")
+                     f"{ref_val:.0f}/s ({ratio:.2f}x, tol -{tol:.0%}) "
+                     f"{status}")
         if status == "REGRESSED":
             failures.append(f"{name}:{label}")
+    claim_failures, claim_lines = _check_claims(cur)
+    lines.extend(claim_lines)
+    failures.extend(f"{name}:claim:{c}" for c in claim_failures)
     return failures, lines
 
 
-def check(verbose: bool = True) -> int:
+def check(verbose: bool = True, remeasure=None, k: int = 2) -> int:
     all_failures = []
     if verbose:
         print("check_bench: tracked rates vs committed baseline "
-              f"(tolerance -{TOLERANCE:.0%})")
+              f"(default tolerance -{TOLERANCE:.0%})")
     for name, metrics_fn in BENCHES:
-        failures, lines = _check_one(name, metrics_fn)
+        failures, lines = _check_one(name, metrics_fn,
+                                     remeasure=remeasure, k=k)
         if verbose:
             print(f" {name}:")
             for line in lines:
                 print(line)
         all_failures.extend(failures)
     if all_failures:
-        print(f"check_bench: FAIL — regressed >{TOLERANCE:.0%} or corrupt: "
-              f"{', '.join(all_failures)}")
+        print("check_bench: FAIL — regressed past tolerance, claim "
+              f"violated, or corrupt: {', '.join(all_failures)}")
         return 1
     if verbose:
         print("check_bench: PASS")

@@ -181,6 +181,26 @@ assert TRACE_COUNTS["serve_allocation"] - _before == _touched, \
 print(f"alloc serve OK: {len(_res)} mixed-N requests, "
       f"{_touched} buckets, 1 trace each")
 
+# fault-injection engine: a tiny attack-vs-defense grid — 2 scenarios
+# (clean-gates vs adaptive attacker + straggler storm) × S=2 seeds in ONE
+# sweep dispatch, zero mid-grid retraces (ISSUE 7 smoke).  Every fault
+# knob is a traced operand: the two scenarios share the executable.
+from repro.core.faults import FaultConfig
+
+_scenarios = [FaultConfig(),                   # legacy static attacker
+              FaultConfig(rep_gate=0.85, p_outage=0.2, p_slow=0.3,
+                          compute_slowdown=2.0, channel_fade=0.5)]
+_fls_f = [FLConfig(n_selected=3, local_steps=4, server_steps=4, lr=0.1)] * 2
+_before = TRACE_COUNTS["run_round"]
+_fin_f, _fgrid = sweep_training(_states, _data, _fls_f, GameConfig(),
+                                _logits_fn, rounds=2, faults=_scenarios)
+assert _fgrid["val_acc"].shape == (2, 2, 2)
+assert bool(jnp.all(jnp.isfinite(_fgrid["val_acc"])))
+assert _fgrid["n_dropped"].shape == (2, 2, 2)
+assert TRACE_COUNTS["run_round"] - _before == 1, "fault grid retraced"
+print(f"fault grid OK: 2 scenarios x S=2 x R=2, 1 trace, "
+      f"dropped={int(jnp.sum(_fgrid['n_dropped']))}")
+
 # benchmark regression gate (no-op when BENCH json / git baseline is absent)
 import pathlib, subprocess, sys
 _root = pathlib.Path(__file__).resolve().parents[1]

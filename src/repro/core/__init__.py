@@ -5,6 +5,9 @@ from .channel import (BANDWIDTH_HZ, noise_power, sample_channel_gains,
 from .dinkelbach import dinkelbach_power, successive_power
 from .sic import (SIC_MODES, successive_power_any, successive_power_blocked,
                   successive_power_eager, suffix_interference)
+from .faults import (ATTACK_PROFILES, FaultConfig, FaultOps,
+                     adaptive_attacker, duty_cycle_attacker, fault_ops,
+                     stack_fault_ops, static_attacker, straggler_storm)
 from .fl_round import (FLConfig, FLState, batched_training, run_round,
                        run_training, run_training_eager, run_training_scan,
                        stack_fl_ops, stack_states, sweep_training)
@@ -34,6 +37,9 @@ __all__ = [
     "FLConfig", "FLState", "run_round", "run_training", "run_training_eager",
     "run_training_scan", "batched_training", "sweep_training", "stack_states",
     "stack_fl_ops", "TRACE_COUNTS", "reset_trace_counts",
+    "ATTACK_PROFILES", "FaultConfig", "FaultOps", "adaptive_attacker",
+    "duty_cycle_attacker", "fault_ops", "stack_fault_ops", "static_attacker",
+    "straggler_storm",
     "BENCHMARK_WEIGHTS",
     "PROPOSED_WEIGHTS", "ReputationState", "init_reputation",
     "reputation_score", "select_clients", "Allocation", "GameConfig",

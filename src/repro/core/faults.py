@@ -1,0 +1,258 @@
+"""Trace-safe fault-injection scenario engine (ISSUE-7 tentpole).
+
+The paper's whole premise is robustness — stragglers from limited compute
+and unreliable wireless links, plus poisoning attacks on model updates —
+but a static always-on label flipper is the weakest adversary the
+fixed-weight reputation scheme ever meets.  This module grows the threat
+model into a scenario *library* whose every knob is a TRACED operand, so
+an attack-vs-defense grid rides ``sweep_training`` as one sharded XLA
+dispatch per (scheme, shape) with zero mid-grid retraces.
+
+Attack / fault taxonomy
+=======================
+
+===============  =========================  ================================
+axis             knobs (all traced)         mechanism in the round body
+===============  =========================  ================================
+static poison    (data.poisoned only)       label-flip every round — the
+                                            legacy attacker; ``FaultConfig()``
+                                            defaults reproduce it exactly.
+adaptive poison  ``rep_gate``               attacker reads its OWN current
+                                            reputation Z_n (the selection
+                                            score) and poisons only while
+                                            Z_n ≥ gate · median(Z) — the
+                                            gate is RELATIVE to the
+                                            population median, so it is
+                                            invariant to the deployed
+                                            scheme's score scale; after
+                                            RONI detections sink its PI
+                                            term below the crowd it lies
+                                            low, then resumes once
+                                            reputation recovers
+                                            (FLARE-style, arXiv 2511.14715).
+duty cycle       ``duty_period, duty_on``   poison iff
+                                            round % period < on — on–off
+                                            bursts keyed on the round index
+                                            carried in the scan.
+sybil pool       ``data.federated.          one attacker dataset split
+                 make_sybil_data``          across P colluding client IDs:
+                                            each identity is small (low AC)
+                                            and NI verdicts land on one
+                                            identity at a time, diluting
+                                            the PI bookkeeping.
+channel outage   ``p_outage``               per-round Bernoulli deep fade:
+                                            the client's h2 is zeroed and
+                                            its lane is MASKED through the
+                                            traced ``mask`` path of
+                                            ``stackelberg._solve`` /
+                                            ``_oma_body`` / ``_random_body``
+                                            — the equilibrium re-solves
+                                            with the n_eff survivors
+                                            (graceful mid-round
+                                            degradation, not a crash).
+compute slowdown ``p_slow,                  a slowed client's achieved
+                 compute_slowdown``         compute time is t_cmp·slowdown
+                                            (its CPU underdelivers the
+                                            allocated f_n), so it misses
+                                            the deadline it was scheduled
+                                            to exactly meet → straggler.
+channel fade     ``channel_fade``           slowed clients also transmit
+                                            through a degraded channel
+                                            h2·fade (the solver SEES the
+                                            fade and re-allocates — unlike
+                                            the outage, which it must
+                                            survive).
+===============  =========================  ================================
+
+Graceful mid-round degradation
+------------------------------
+A dropped client becomes a masked lane (PR 6's serving path): its h2 = 0
+tail slot is invisible to every SIC suffix sum, ``jnp.where`` masking
+erases it from d_hat / latency / energy / feasibility, and OMA divides
+bandwidth/slots by the survivor count.  The masked solve zeroes the
+lane's mapping ratio v, so none of its samples DT-map this round, its
+local update never arrives (``meets &= alive``), and its reputation
+bookkeeping is skipped (no PI/NI — the server never saw an update to
+judge): the dropout erases the client from the round END-TO-END, and a
+round with dropped clients matches the same round solved with those
+lanes masked (the parity tests budget ≤1e-5).  The *system-level*
+resilience is that the surviving n_eff clients still get a coherent
+re-solved equilibrium — the round degrades instead of crashing.
+
+Execution contract
+------------------
+``FaultConfig`` is a frozen hashable record of plain floats/ints;
+``fault_ops`` lowers it to a ``FaultOps`` pytree of array operands
+(mirroring ``GameConfig.physics()`` / ``fl_round._fl_ops``), and
+``stack_fault_ops`` stacks C points into [C]-leaved pytrees for the
+config axis of ``sweep_training``.  The ONLY structural compile flag is
+``faults=None`` vs present (the None-vs-pytree treedef); every knob is an
+operand, so a whole attack grid shares one executable per
+(scheme, use_roni, shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """One scenario's fault/attack knobs (plain numbers, hashable).
+
+    The defaults are the NULL scenario: attackers (clients flagged in
+    ``data.poisoned``) poison every round (``rep_gate=0`` — reputation is
+    non-negative — and a 1/1 duty cycle), and no straggler/outage process
+    runs.  ``FaultConfig()`` therefore reproduces the legacy static
+    attacker bit-for-bit up to the extra PRNG splits drawn for the fault
+    processes (documented in ``fl_round._round_body``)."""
+    # -- adaptive attacker ------------------------------------------------
+    rep_gate: float = 0.0        # poison while own Z ≥ gate · median(Z)
+    duty_period: int = 1         # on–off cycle length in rounds
+    duty_on: int = 1             # attacking rounds per period (≥ period ⇒ always)
+    # -- straggler / dropout processes ------------------------------------
+    p_outage: float = 0.0        # P(per-round channel outage → dropped lane)
+    p_slow: float = 0.0          # P(per-round compute straggler)
+    compute_slowdown: float = 1.0   # achieved t_cmp multiplier when slowed
+    channel_fade: float = 1.0    # h2 multiplier when slowed (solver-visible)
+
+    def ops(self, dtype=jnp.float32) -> "FaultOps":
+        return fault_ops(self, dtype)
+
+
+@dataclass(frozen=True)
+class FaultOps:
+    """The traced view of ``FaultConfig``: every field a JAX array operand
+    (scalar per scenario; [C] under the config axis of ``sweep_training``).
+    Registered as a pytree so it flows through jit/vmap/scan; ``None`` in
+    its place compiles the exact pre-fault round program."""
+    rep_gate: jax.Array
+    duty_period: jax.Array       # int32
+    duty_on: jax.Array           # int32
+    p_outage: jax.Array
+    p_slow: jax.Array
+    compute_slowdown: jax.Array
+    channel_fade: jax.Array
+
+
+_FAULT_FIELDS = tuple(f.name for f in dataclasses.fields(FaultOps))
+_INT_FIELDS = ("duty_period", "duty_on")
+jax.tree_util.register_dataclass(FaultOps, data_fields=_FAULT_FIELDS,
+                                 meta_fields=())
+
+
+def fault_ops(fc: FaultConfig, dtype=jnp.float32) -> FaultOps:
+    """Lower one ``FaultConfig`` to device-scalar operands."""
+    return FaultOps(**{
+        name: jnp.asarray(getattr(fc, name),
+                          jnp.int32 if name in _INT_FIELDS else dtype)
+        for name in _FAULT_FIELDS})
+
+
+def stack_fault_ops(fcs: Sequence[FaultConfig],
+                    dtype=jnp.float32) -> FaultOps:
+    """Stack C scenarios into a ``FaultOps`` with [C]-shaped leaves — the
+    config axis of ``sweep_training``, mirroring ``stack_physics`` /
+    ``stack_fl_ops``.  There is nothing to reject: every fault knob is an
+    operand, so arbitrary scenario mixes share one executable."""
+    return FaultOps(**{
+        name: jnp.asarray([getattr(fc, name) for fc in fcs],
+                          jnp.int32 if name in _INT_FIELDS else dtype)
+        for name in _FAULT_FIELDS})
+
+
+def sample_round_faults(key, fops: FaultOps,
+                        n: int) -> Tuple[jax.Array, jax.Array]:
+    """Draw one round's per-client fault realization.
+
+    Returns ``(outage, slow)``, both [n] bool: ``outage`` marks clients
+    whose channel died this round (→ masked lane), ``slow`` marks compute
+    stragglers (→ t_cmp·slowdown, h2·fade).  Probabilities are traced
+    operands, so a scenario sweep reuses the executable."""
+    k_out, k_slow = jax.random.split(key)
+    outage = jax.random.uniform(k_out, (n,)) < fops.p_outage
+    slow = jax.random.uniform(k_slow, (n,)) < fops.p_slow
+    return outage, slow
+
+
+def attack_active(fops: FaultOps, poisoned, z_own, z_ref,
+                  round_idx) -> jax.Array:
+    """Per-client poison gate for this round ([N] bool).
+
+    A flagged attacker poisons iff BOTH adaptive gates pass:
+      * reputation gate — its own current selection score ``z_own``
+        (Eq. 16, computed pre-round) is at or above ``rep_gate · z_ref``,
+        where ``z_ref`` is the population median score.  The RELATIVE
+        gate makes the attacker scale-invariant to the deployed scheme's
+        weights: it measures its standing against the crowd, not against
+        an absolute number it cannot calibrate;
+      * duty cycle     — ``round_idx % duty_period < duty_on`` (the round
+        index rides the scan carry, so the schedule is trace-safe).
+    """
+    period = jnp.maximum(fops.duty_period, 1)
+    duty = jnp.mod(round_idx, period) < fops.duty_on
+    return poisoned & (z_own >= fops.rep_gate * z_ref) & duty
+
+
+def slowdown_multiplier(fops: FaultOps, slow) -> jax.Array:
+    """Achieved-compute-time multiplier per client (1 where not slowed)."""
+    one = jnp.ones((), fops.compute_slowdown.dtype)
+    return jnp.where(slow, fops.compute_slowdown, one)
+
+
+def faded_channel(fops: FaultOps, h2, outage, slow) -> jax.Array:
+    """Apply the channel fault processes to this round's gains: slowed
+    clients fade by ``channel_fade`` (solver-visible), outage lanes drop
+    to EXACTLY zero so they sink to the SIC tail under the descending
+    sort and stay invisible to every suffix interference sum."""
+    dtype = h2.dtype
+    h2 = jnp.where(slow, h2 * fops.channel_fade.astype(dtype), h2)
+    return jnp.where(outage, jnp.zeros((), dtype), h2)
+
+
+# ---------------------------------------------------------------------------
+# scenario profiles (the attack-vs-defense grid vocabulary)
+# ---------------------------------------------------------------------------
+def static_attacker(**kw) -> FaultConfig:
+    """The legacy always-on label flipper (gates wide open)."""
+    return FaultConfig(**kw)
+
+
+def adaptive_attacker(rep_gate: float = 0.85, **kw) -> FaultConfig:
+    """Reputation-aware attacker: poisons only while its own selection
+    score stays at/above ``rep_gate ×`` the population median — it turns
+    honest after detections sink its PI term below the crowd, waits out
+    the reputation recovery, then resumes."""
+    return FaultConfig(rep_gate=rep_gate, **kw)
+
+
+def duty_cycle_attacker(period: int = 4, on: int = 2, **kw) -> FaultConfig:
+    """On–off burst attacker: poisons ``on`` rounds out of every
+    ``period`` (evades defenses that key on persistent degradation)."""
+    return FaultConfig(duty_period=period, duty_on=on, **kw)
+
+
+def straggler_storm(p_outage: float = 0.25, p_slow: float = 0.5,
+                    compute_slowdown: float = 3.0,
+                    channel_fade: float = 0.3, **kw) -> FaultConfig:
+    """Heavy straggler/dropout weather: frequent outages (masked-lane
+    re-solves) plus compute slowdowns and channel fades — the graceful-
+    degradation stress scenario."""
+    return FaultConfig(p_outage=p_outage, p_slow=p_slow,
+                       compute_slowdown=compute_slowdown,
+                       channel_fade=channel_fade, **kw)
+
+
+#: Named attack profiles used by ``benchmarks/robustness_grid.py`` and the
+#: dev smoke — poisoned-client placement comes from the DATA (see
+#: ``data.federated``); these set the behavioral gates.
+ATTACK_PROFILES: Dict[str, FaultConfig] = {
+    "static": static_attacker(),
+    "adaptive": adaptive_attacker(),
+    "duty": duty_cycle_attacker(),
+    "storm": straggler_storm(),
+}

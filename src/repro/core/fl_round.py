@@ -62,6 +62,9 @@ from ..data.federated import FedData
 from . import reputation as rep
 from .aggregation import dt_aggregate, fedavg
 from .digital_twin import dt_feature_noise, split_mapping_mask
+from .faults import (FaultConfig, FaultOps, attack_active, faded_channel,
+                     fault_ops, sample_round_faults, slowdown_multiplier,
+                     stack_fault_ops)
 from .roni import roni_filter
 from .stackelberg import (TRACE_COUNTS, Allocation, GameConfig,
                           _oma_body, _physics_cached, _random_body,
@@ -225,29 +228,38 @@ def sweep_allocation(scheme: str, configs, h2_batch, d_batch, v_max_batch,
 
 
 def _allocate_traced(scheme: str, phys, inner: str, key, h2_sorted, d_units,
-                     v_max_sel, sic_mode: str = "sequential") -> Allocation:
+                     v_max_sel, sic_mode: str = "sequential",
+                     mask=None) -> Allocation:
     """Scheme dispatch inside the traced round body: direct calls into the
     shared solver bodies with the traced ``GamePhysics`` — no nested jit
     wrappers, no host syncs, one executable across GameConfig values.
     ``scheme``/``inner``/``sic_mode`` are static (compile keys); everything
-    else is an operand."""
+    else is an operand.
+
+    ``mask`` ([N] bool operand, default None) is the graceful-degradation
+    path of the fault engine: lanes of mid-round dropouts carry h2 = 0 (the
+    SIC tail) and are masked through the same traced ``mask`` plumbing the
+    padded serving buckets use (``stackelberg._solve``/``_oma_body``/
+    ``_random_body``), so the equilibrium re-solves over the n_eff
+    survivors instead of allocating power to a dead client."""
     dtype = jnp.result_type(h2_sorted)
     tol = jnp.asarray(1e-6, dtype)
     eps0 = jnp.asarray(0.0, dtype)
     if scheme in ("proposed", "ideal"):
         return _solve(phys, h2_sorted, d_units, v_max_sel, eps0, 20, tol,
-                      inner, sic_mode)
+                      inner, sic_mode, mask=mask)
     if scheme == "wo_dt":
         return _solve(phys, h2_sorted, d_units, jnp.zeros_like(h2_sorted),
-                      eps0, 20, tol, inner, sic_mode)
+                      eps0, 20, tol, inner, sic_mode, mask=mask)
     if scheme == "oma":
         return _oma_body(phys, h2_sorted, d_units, v_max_sel, eps0, inner,
-                         tdma=False)
+                         tdma=False, mask=mask)
     if scheme == "oma_tdma":
         return _oma_body(phys, h2_sorted, d_units, v_max_sel, eps0, inner,
-                         tdma=True)
+                         tdma=True, mask=mask)
     if scheme == "random":
-        return _random_body(phys, key, h2_sorted, d_units, v_max_sel, eps0)
+        return _random_body(phys, key, h2_sorted, d_units, v_max_sel, eps0,
+                            mask=mask)
     raise ValueError(scheme)
 
 
@@ -257,37 +269,72 @@ def _allocate_traced(scheme: str, phys, inner: str, key, h2_sorted, d_units,
 def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
                 use_roni: bool, n_selected: int, local_steps: int,
                 server_steps: int, inner: str, logits_fn: Callable,
-                sic_mode: str = "sequential") -> Tuple[FLState, Dict]:
+                sic_mode: str = "sequential",
+                fops: FaultOps | None = None) -> Tuple[FLState, Dict]:
     """One FL round as a pure traced function.
 
     ``phys`` is the ``GamePhysics`` pytree; ``ops`` the dict of traced FL
     scalars (lr / epsilon / roni_threshold / samples_per_unit / weights).
     Returns (new_state, metrics) with metrics a dict of ARRAYS — under
-    ``lax.scan`` they stack into the (R, ...) history."""
+    ``lax.scan`` they stack into the (R, ...) history.
+
+    ``fops`` (a ``FaultOps`` pytree, or None) switches on the fault
+    engine (``repro.core.faults``): adaptive/duty-cycled poisoning gated
+    on the attacker's own pre-round reputation, Bernoulli channel outages
+    that re-solve the equilibrium over the surviving lanes (the traced
+    ``mask`` path), and compute-slowdown stragglers.  ``fops=None``
+    compiles the EXACT pre-fault round program — the None-vs-pytree
+    treedef is the only structural compile flag, every fault knob is an
+    operand.  When faults are on, one extra PRNG split feeds the fault
+    draws (the fault trajectory is a different — equally deterministic —
+    stream from the fault-free one)."""
     m = data.x.shape[0]
     key, k_ch, k_map, k_dt, k_alloc = jax.random.split(state.key, 5)
+    if fops is not None:
+        key, k_fault = jax.random.split(key)
 
-    # 1. selection
-    sel, _z = rep.select_clients(state.rep, data.sizes, n_selected,
-                                 ops["epsilon"], ops["weights"])
+    # 1. selection (z is every client's current reputation — the adaptive
+    # attacker reads its OWN score off the same Eq.-16 vector)
+    sel, z_all = rep.select_clients(state.rep, data.sizes, n_selected,
+                                    ops["epsilon"], ops["weights"])
     sel_mask = jnp.zeros((m,), bool).at[sel].set(True)
 
-    # 2. channel + SIC order (descending gain among the selected)
+    # 2. channel + SIC order (descending gain among the selected); fault
+    # processes apply BEFORE the sort, so outage lanes (h2 = 0) sink to
+    # the SIC tail — the masked-solve invariant of stackelberg._solve
     h2 = sample_round_channels(k_ch, state.distances)[sel]
+    if fops is not None:
+        outage, slow = sample_round_faults(k_fault, fops, n_selected)
+        h2 = faded_channel(fops, h2, outage, slow)
     order = jnp.argsort(-h2)
     sel_sorted = sel[order]
     h2_sorted = h2[order]
+    alive = None if fops is None else ~outage[order]
+    slow_sorted = None if fops is None else slow[order]
 
-    # 3. allocation
+    # 3. allocation — dropped lanes masked, so the game re-solves with
+    # n_eff survivors (graceful mid-round degradation, not a crash)
     d_units = data.sizes[sel_sorted] * ops["samples_per_unit"]
     v_max_sel = state.v_max[sel_sorted]
     alloc = _allocate_traced(scheme, phys, inner, k_alloc, h2_sorted,
-                             d_units, v_max_sel, sic_mode)
+                             d_units, v_max_sel, sic_mode, mask=alive)
     v = alloc.v if scheme != "ideal" else jnp.zeros_like(alloc.v)
 
-    # 4. DT split of the selected clients' data
+    # 4. DT split of the selected clients' data.  (A dropped lane's v is
+    # zeroed by the masked solve, so none of its samples map this round —
+    # the dropout erases the client from the round end-to-end.)
     xs = data.x[sel_sorted]
-    ys_train = data.y_train[sel_sorted]
+    if fops is None:
+        ys_train = data.y_train[sel_sorted]
+    else:
+        # adaptive attacker: poison only while the behavioral gates pass
+        # (own reputation ≥ rep_gate · median(Z) AND the duty cycle is in
+        # an on-phase); otherwise train honestly on the true labels
+        attacking = attack_active(fops, data.poisoned[sel_sorted],
+                                  z_all[sel_sorted], jnp.median(z_all),
+                                  state.round)
+        ys_train = jnp.where(attacking[:, None], data.y_train[sel_sorted],
+                             data.y[sel_sorted])
     msk = data.mask[sel_sorted]
     map_mask = split_mapping_mask(k_map, msk, v)      # True = mapped to DT
     if scheme == "ideal":
@@ -308,11 +355,17 @@ def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
                               server_steps, ops["lr"])
 
     # 6. straggler deadline check (tolerance: the leader schedules
-    # deadline-EXACT finishes, so `<=` would coin-flip on float error)
+    # deadline-EXACT finishes, so `<=` would coin-flip on float error).
+    # A slowed client's CPU underdelivers the allocated f_n: its ACHIEVED
+    # compute time is t_cmp·slowdown, so deadline-exact schedules miss.
     if scheme == "ideal":
         meets = jnp.ones((n_selected,), bool)
     else:
-        meets = (alloc.t_cmp + alloc.t_com) <= phys.t_max * 1.001
+        t_cmp_real = alloc.t_cmp if fops is None else (
+            alloc.t_cmp * slowdown_multiplier(fops, slow_sorted))
+        meets = (t_cmp_real + alloc.t_com) <= phys.t_max * 1.001
+    if fops is not None:
+        meets = meets & alive            # a dropped update never arrives
 
     # 7. RONI
     if use_roni:
@@ -348,8 +401,10 @@ def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
         lambda new, old: jnp.where(any_included, new, old),
         agg, state.params)
 
-    # 9. reputation bookkeeping
-    new_rep = rep.update_interactions(state.rep, sel_sorted, positive)
+    # 9. reputation bookkeeping (a dropped client's verdict is not
+    # recorded — the server never received an update to judge)
+    new_rep = rep.update_interactions(state.rep, sel_sorted, positive,
+                                      count_mask=alive)
     new_rep = rep.update_staleness(new_rep, sel_mask)
 
     metrics = {
@@ -365,6 +420,10 @@ def _round_body(state: FLState, data: FedData, phys, ops: Dict, scheme: str,
             jnp.sum(data.poisoned[sel_sorted]).astype(jnp.int32),
         "mean_v": jnp.mean(v),
     }
+    if fops is not None:
+        metrics["n_dropped"] = jnp.sum(~alive).astype(jnp.int32)
+        metrics["n_slowed"] = jnp.sum(slow_sorted & alive).astype(jnp.int32)
+        metrics["n_attacking"] = jnp.sum(attacking).astype(jnp.int32)
     new_state = FLState(params=new_params, rep=new_rep, v_max=state.v_max,
                         distances=state.distances, key=key,
                         round=state.round + 1)
@@ -391,10 +450,19 @@ def _canon_state(state: FLState) -> FLState:
                                round=jnp.asarray(state.round, jnp.int32))
 
 
-def _prep(state: FLState, fl: FLConfig, game: GameConfig):
+def _fault_operand(faults, dtype) -> FaultOps | None:
+    """Normalize the user-facing ``faults`` argument: None passes through
+    (the structural off flag), a ``FaultConfig`` lowers to traced operands,
+    a pre-built ``FaultOps`` (e.g. a stacked [C] pytree) is used as-is."""
+    if faults is None or isinstance(faults, FaultOps):
+        return faults
+    return fault_ops(faults, dtype)
+
+
+def _prep(state: FLState, fl: FLConfig, game: GameConfig, faults=None):
     dtype = jnp.result_type(jnp.asarray(state.distances))
     return (_canon_state(state), _physics_cached(game, dtype),
-            _fl_ops(fl, dtype))
+            _fl_ops(fl, dtype), _fault_operand(faults, dtype))
 
 
 def _static_kwargs(fl: FLConfig, game: GameConfig, logits_fn: Callable):
@@ -405,12 +473,12 @@ def _static_kwargs(fl: FLConfig, game: GameConfig, logits_fn: Callable):
 
 
 def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
-              logits_fn: Callable) -> Tuple[FLState, Dict]:
+              logits_fn: Callable, faults=None) -> Tuple[FLState, Dict]:
     """Legacy per-round entry point: executes the shared round body through
     the eager stage-by-stage path and syncs metrics to python scalars (the
     per-round host round-trips the scanned path exists to remove)."""
-    state, phys, ops = _prep(state, fl, game)
-    new_state, metrics = _round_body(state, data, phys, ops,
+    state, phys, ops, fops = _prep(state, fl, game, faults)
+    new_state, metrics = _round_body(state, data, phys, ops, fops=fops,
                                      **_static_kwargs(fl, game, logits_fn))
     host = {k: jax.device_get(v) for k, v in metrics.items()}
     for k, v in host.items():
@@ -421,14 +489,15 @@ def run_round(state: FLState, data: FedData, fl: FLConfig, game: GameConfig,
 
 
 def run_training_eager(state: FLState, data: FedData, fl: FLConfig,
-                       game: GameConfig, logits_fn: Callable, rounds: int):
+                       game: GameConfig, logits_fn: Callable, rounds: int,
+                       faults=None):
     """Legacy host-side round loop: R separate dispatch chains with
     per-round metric syncs.  Kept as the numerical reference for the
     scanned trajectory (tests) and as the baseline tier of
     ``benchmarks/training_throughput.py``."""
     history = []
     for _ in range(rounds):
-        state, metrics = run_round(state, data, fl, game, logits_fn)
+        state, metrics = run_round(state, data, fl, game, logits_fn, faults)
         history.append(metrics)
     return state, history
 
@@ -442,25 +511,25 @@ _TRAINING_STATIC = ("scheme", "use_roni", "n_selected", "local_steps",
 
 
 @partial(jax.jit, static_argnames=_TRAINING_STATIC)
-def _training_scan_jit(phys, state, data, ops, *, rounds, **static):
+def _training_scan_jit(phys, state, data, ops, fops, *, rounds, **static):
     TRACE_COUNTS["run_training_scan"] += 1
 
     def body(carry, _):
         TRACE_COUNTS["run_round"] += 1
-        return _round_body(carry, data, phys, ops, **static)
+        return _round_body(carry, data, phys, ops, fops=fops, **static)
 
     return jax.lax.scan(body, state, None, length=rounds)
 
 
 @partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
-def _batched_training_jit(phys, states, data, ops, *, rounds, data_batched,
-                          **static):
+def _batched_training_jit(phys, states, data, ops, fops, *, rounds,
+                          data_batched, **static):
     TRACE_COUNTS["batched_training"] += 1
 
     def scan_one(st, dt):
         def body(carry, _):
             TRACE_COUNTS["run_round"] += 1
-            return _round_body(carry, dt, phys, ops, **static)
+            return _round_body(carry, dt, phys, ops, fops=fops, **static)
 
         return jax.lax.scan(body, st, None, length=rounds)
 
@@ -470,7 +539,8 @@ def _batched_training_jit(phys, states, data, ops, *, rounds, data_batched,
 
 
 def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
-                      game: GameConfig, logits_fn: Callable, rounds: int):
+                      game: GameConfig, logits_fn: Callable, rounds: int,
+                      faults=None):
     """The whole R-round trajectory as ONE ``lax.scan`` dispatch of one
     compiled program.
 
@@ -481,19 +551,25 @@ def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
     Compile key: (scheme, use_roni, shapes/steps, rounds, logits_fn,
     dinkelbach inner); all physics and FL scalars are traced operands, so
     e.g. an lr or t_max sweep reuses the executable.
+
+    ``faults`` (a ``FaultConfig``, or None) switches on the fault engine —
+    see ``repro.core.faults``.  Its presence is the only new structural
+    compile flag; every fault knob is a traced operand, so a scenario
+    sweep shares the executable.
     """
-    state, phys, ops = _prep(state, fl, game)
-    return _training_scan_jit(phys, state, data, ops, rounds=rounds,
+    state, phys, ops, fops = _prep(state, fl, game, faults)
+    return _training_scan_jit(phys, state, data, ops, fops, rounds=rounds,
                               **_static_kwargs(fl, game, logits_fn))
 
 
 def run_training(state: FLState, data: FedData, fl: FLConfig,
-                 game: GameConfig, logits_fn: Callable, rounds: int):
+                 game: GameConfig, logits_fn: Callable, rounds: int,
+                 faults=None):
     """Compat shim over ``run_training_scan``: same signature and return
     shape as the legacy host loop — a list of per-round metric dicts with
     python scalars (``selected`` stays an ``[N]`` int array per round)."""
     state, stacked = run_training_scan(state, data, fl, game, logits_fn,
-                                       rounds)
+                                       rounds, faults)
     host = {k: jax.device_get(v) for k, v in stacked.items()}
     history = [{k: (v[r] if v.ndim > 1 else v[r].item())
                 for k, v in host.items()} for r in range(rounds)]
@@ -538,7 +614,8 @@ def _shard_tree(tree, size: int):
 
 
 def batched_training(states: FLState, data: FedData, fl: FLConfig,
-                     game: GameConfig, logits_fn: Callable, rounds: int):
+                     game: GameConfig, logits_fn: Callable, rounds: int,
+                     faults=None):
     """S independent R-round trajectories in ONE XLA dispatch: ``vmap`` of
     the scanned round loop over a leading seed axis, device-sharded across
     the seed axis (single-device no-op).
@@ -548,45 +625,74 @@ def batched_training(states: FLState, data: FedData, fl: FLConfig,
     data   : shared ``FedData``, or one with a leading S axis
              (``data.x.ndim == 4``) for per-seed datasets — e.g. an
              attacker-fraction axis where seed s was poisoned at ratio r_s.
+    faults : optional ``FaultConfig`` (one scenario, broadcast across the
+             seed axis) switching on the fault engine for every seed.
 
     Returns ``(final_states, metrics)`` with an extra leading S axis on
     every leaf/metric relative to ``run_training_scan``.  Seed s of the
     result equals ``run_training_scan`` on seed s alone (pure batching).
     """
-    states, phys, ops = _prep(states, fl, game)
+    states, phys, ops, fops = _prep(states, fl, game, faults)
     data_batched = data.x.ndim == 4
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
     states = _shard_tree(states, s)
     if data_batched:
         data = _shard_tree(data, s)
-    return _batched_training_jit(phys, states, data, ops, rounds=rounds,
-                                 data_batched=data_batched,
+    return _batched_training_jit(phys, states, data, ops, fops,
+                                 rounds=rounds, data_batched=data_batched,
                                  **_static_kwargs(fl, game, logits_fn))
 
 
 @partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
-def _sweep_training_jit(phys, states, data, ops, *, rounds, data_batched,
-                        **static):
+def _sweep_training_jit(phys, states, data, ops, fops, *, rounds,
+                        data_batched, **static):
     """vmap of the scanned trajectory over the FLATTENED C×S grid axis:
-    physics and FL ops are mapped per grid cell (unlike the seed-only vmap,
-    which broadcasts them), so one executable covers the whole config grid."""
+    physics, FL ops and fault ops are mapped per grid cell (unlike the
+    seed-only vmap, which broadcasts them), so one executable covers the
+    whole config grid.  ``fops=None`` (an empty pytree under vmap) compiles
+    the fault-free grid program."""
     TRACE_COUNTS["sweep_training"] += 1
 
-    def scan_cell(ph, op, st, dt):
+    def scan_cell(ph, op, fo, st, dt):
         def body(carry, _):
             TRACE_COUNTS["run_round"] += 1
-            return _round_body(carry, dt, ph, op, **static)
+            return _round_body(carry, dt, ph, op, fops=fo, **static)
 
         return jax.lax.scan(body, st, None, length=rounds)
 
     if data_batched:
-        return jax.vmap(scan_cell)(phys, ops, states, data)
-    return jax.vmap(lambda ph, op, st: scan_cell(ph, op, st, data))(
-        phys, ops, states)
+        return jax.vmap(scan_cell)(phys, ops, fops, states, data)
+    return jax.vmap(lambda ph, op, fo, st: scan_cell(ph, op, fo, st, data))(
+        phys, ops, fops, states)
+
+
+def _sweep_fault_ops(faults, c: int, dtype) -> FaultOps | None:
+    """Normalize ``sweep_training``'s ``faults`` argument to [C]-leaved
+    ``FaultOps`` (or None): a single ``FaultConfig`` broadcasts across the
+    config axis, a sequence must have C entries (one scenario per config
+    point), a pre-stacked ``FaultOps`` is validated and used as-is."""
+    if faults is None:
+        return None
+    if isinstance(faults, FaultOps):
+        got = faults.rep_gate.shape
+        if got != (c,):
+            raise ValueError(f"stacked FaultOps leaves must be [{c}]-shaped "
+                             f"(one per config point); got {got}")
+        return faults
+    if isinstance(faults, FaultConfig):
+        faults = [faults] * c
+    faults = list(faults)
+    if len(faults) == 1:
+        faults = faults * c
+    if len(faults) != c:
+        raise ValueError(f"fault axis mismatch: {len(faults)} FaultConfig "
+                         f"points vs {c} config points")
+    return stack_fault_ops(faults, dtype)
 
 
 def sweep_training(states: FLState, data: FedData, fls, games,
-                   logits_fn: Callable, rounds: int):
+                   logits_fn: Callable, rounds: int, faults=None,
+                   data_axis: str = "seed"):
     """A whole config-grid of training runs — C (``FLConfig``,
     ``GameConfig``) points × S seeds × R rounds — as ONE XLA dispatch of
     one executable (the Fig. 5/6/7/8 workload).
@@ -601,10 +707,18 @@ def sweep_training(states: FLState, data: FedData, fls, games,
              physics floats are stacked into a [C]-leaved ``GamePhysics``.
     states : ``FLState`` with a leading S seed axis (``stack_states``),
              shared across the config axis.
-    data   : shared ``FedData`` (``x.ndim == 3``) or one with a leading S
-             axis (``x.ndim == 4``) for per-seed datasets — e.g. fig5's
-             attacker-fraction axis, where seed s was poisoned at ratio
-             r_s; a per-seed dataset is shared across the config axis.
+    data   : shared ``FedData`` (``x.ndim == 3``), or one with a leading
+             batch axis (``x.ndim == 4``) whose meaning ``data_axis``
+             selects — ``"seed"`` (default): S per-seed datasets shared
+             across configs (fig5's attacker-fraction axis); ``"config"``:
+             C per-config datasets shared across seeds (the attack-grid
+             axis, where each scenario plants different poisoned/sybil
+             clients).
+    faults : optional fault-engine axis — a single ``FaultConfig``
+             (broadcast), a C-sequence of them (one scenario per config
+             point), or a pre-stacked [C]-leaved ``FaultOps``.  Its
+             presence is the only structural compile flag; every knob is
+             traced, so the whole attack grid shares one executable.
 
     The C×S grid is flattened and device-sharded through the same
     ``sharding_layout``/``NamedSharding`` machinery as the K axis of the
@@ -613,20 +727,39 @@ def sweep_training(states: FLState, data: FedData, fls, games,
     leaf — cell (c, s) equals ``run_training_scan`` with configs c on seed
     s alone (pure batching).
     """
+    if data_axis not in ("seed", "config"):
+        raise ValueError(f"data_axis must be 'seed' or 'config', "
+                         f"got {data_axis!r}")
     fls = [fls] if isinstance(fls, FLConfig) else list(fls)
     games = [games] if isinstance(games, GameConfig) else list(games)
-    if len(fls) == 1 and len(games) > 1:
-        fls = fls * len(games)
-    if len(games) == 1 and len(fls) > 1:
-        games = games * len(fls)
+    # the config-axis length is set by whichever axis is non-singleton —
+    # fls/games first, then the fault axis (an attack grid may sweep
+    # scenarios over ONE (FLConfig, GameConfig) point); singletons
+    # broadcast, non-singleton axes must agree
+    if isinstance(faults, FaultOps):
+        n_faults = faults.rep_gate.shape[0]
+    elif faults is None or isinstance(faults, FaultConfig):
+        n_faults = 1
+    else:
+        faults = list(faults)
+        n_faults = len(faults)
+    c = max(len(fls), len(games))
+    if len(fls) == 1:
+        fls = fls * c
+    if len(games) == 1:
+        games = games * c
     if len(fls) != len(games):
         raise ValueError(f"config axis mismatch: {len(fls)} FLConfig vs "
                          f"{len(games)} GameConfig points")
-    c = len(fls)
+    if c == 1 and n_faults > 1:
+        fls = fls * n_faults
+        games = games * n_faults
+        c = n_faults
     states = _canon_state(states)
     dtype = jnp.result_type(jnp.asarray(states.distances))
     phys = stack_physics(games, dtype)            # [C] leaves
     ops = stack_fl_ops(fls, dtype)                # [C] / [C, 3] leaves
+    fops = _sweep_fault_ops(faults, c, dtype)     # [C] leaves (or None)
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
     g = c * s
 
@@ -637,20 +770,31 @@ def sweep_training(states: FLState, data: FedData, fls, games,
         x[None], (c,) + x.shape).reshape((g,) + x.shape[1:])
     phys = jax.tree_util.tree_map(rep_cfg, phys)
     ops = {k: rep_cfg(v) for k, v in ops.items()}
+    fops = jax.tree_util.tree_map(rep_cfg, fops)
     states = jax.tree_util.tree_map(tile_seed, states)
     data_batched = data.x.ndim == 4
     if data_batched:
-        data = jax.tree_util.tree_map(tile_seed, data)
+        if data_axis == "config":
+            if data.x.shape[0] != c:
+                raise ValueError(
+                    f"data_axis='config' needs a leading [{c}] axis on the "
+                    f"data (one dataset per config point); got "
+                    f"{data.x.shape[0]}")
+            data = jax.tree_util.tree_map(rep_cfg, data)
+        else:
+            data = jax.tree_util.tree_map(tile_seed, data)
 
     # device-shard the flattened grid axis (single-device no-op)
     phys = _shard_tree(phys, g)
     ops = _shard_tree(ops, g)
+    fops = None if fops is None else _shard_tree(fops, g)
     states = _shard_tree(states, g)
     if data_batched:
         data = _shard_tree(data, g)
 
     final, metrics = _sweep_training_jit(
-        phys, states, data, ops, rounds=rounds, data_batched=data_batched,
+        phys, states, data, ops, fops, rounds=rounds,
+        data_batched=data_batched,
         **_static_kwargs(fls[0], games[0], logits_fn))
     unflat = lambda x: x.reshape((c, s) + x.shape[1:])
     return (jax.tree_util.tree_map(unflat, final),

@@ -81,9 +81,18 @@ def update_staleness(state: ReputationState, selected_mask) -> ReputationState:
 
 
 def update_interactions(state: ReputationState, selected_idx,
-                        positive_mask) -> ReputationState:
-    """Record RONI verdicts for the selected clients."""
-    pi = state.pi_count.at[selected_idx].add(positive_mask.astype(jnp.float32))
-    ni = state.ni_count.at[selected_idx].add(
-        (~positive_mask).astype(jnp.float32))
+                        positive_mask, count_mask=None) -> ReputationState:
+    """Record RONI verdicts for the selected clients.
+
+    ``count_mask`` ([n] bool operand, default None = all True) limits whose
+    verdict is recorded at all: a dropped client (fault-engine channel
+    outage) never delivered an update, so the server has nothing to judge —
+    neither its PI nor its NI counter moves."""
+    pos = positive_mask
+    neg = ~positive_mask
+    if count_mask is not None:
+        pos = pos & count_mask
+        neg = neg & count_mask
+    pi = state.pi_count.at[selected_idx].add(pos.astype(jnp.float32))
+    ni = state.ni_count.at[selected_idx].add(neg.astype(jnp.float32))
     return ReputationState(ms=state.ms, pi_count=pi, ni_count=ni)

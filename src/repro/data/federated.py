@@ -78,3 +78,51 @@ def make_federated_data(key, spec: ImageProxySpec, m: int = 20,
     return FedData(x=x, y=y, y_train=y_train, mask=mask,
                    sizes=sizes.astype(jnp.float32), poisoned=poisoned,
                    x_val=xv, y_val=yv)
+
+
+def make_sybil_data(key, data: FedData, pool: int) -> FedData:
+    """Plant a sybil pool: ONE attacker's dataset split across ``pool``
+    colluding client identities (fault-engine taxonomy, `repro.core.faults`).
+
+    The adversary controls one data hoard but registers ``pool`` client
+    IDs, giving each an equal 1/pool slice with flipped training labels.
+    Each identity is individually small (low AC term in Eq. 16) and RONI
+    NI verdicts land on ONE identity at a time, so the PI bookkeeping that
+    sinks a monolithic attacker is diluted across the pool.
+
+    The sybils replace the first ``pool`` client slots of ``data`` (which
+    should be a CLEAN dataset — existing poisoned flags elsewhere are
+    kept).  Returns a new ``FedData``; shapes are unchanged, so it batches
+    against clean datasets on the config axis of ``sweep_training``.
+    """
+    m, cap, dim = data.x.shape
+    if not 1 <= pool <= m:
+        raise ValueError(f"sybil pool size {pool} must be in [1, {m}]")
+    n_classes = int(jnp.max(data.y_val)) + 1
+
+    # the adversary's hoard: one client-sized dataset, drawn fresh so the
+    # slices are IID copies of the same source distribution
+    share = cap // pool
+    k_y, k_n = jax.random.split(key)
+    y_hoard = jax.random.randint(k_y, (pool, cap), 0, n_classes)
+    # rebuild features around the validation-set geometry: per-class means
+    # estimated from the clean val split (the hoard mimics honest data)
+    mu = jnp.stack([
+        jnp.sum(jnp.where((data.y_val == c)[:, None], data.x_val, 0.0),
+                axis=0)
+        / jnp.maximum(jnp.sum(data.y_val == c), 1)
+        for c in range(n_classes)])
+    sigma = jnp.std(data.x_val - mu[data.y_val])
+    x_hoard = mu[y_hoard] + sigma * jax.random.normal(k_n, (pool, cap, dim))
+
+    slot = jnp.arange(cap)[None, :]
+    sybil_mask = slot < share                        # [1, cap] → broadcasts
+    idx = jnp.arange(pool)
+    x = data.x.at[idx].set(x_hoard)
+    y = data.y.at[idx].set(y_hoard)
+    y_train = data.y_train.at[idx].set((n_classes - 1) - y_hoard)
+    mask = data.mask.at[idx].set(jnp.broadcast_to(sybil_mask, (pool, cap)))
+    sizes = data.sizes.at[idx].set(float(share))
+    poisoned = data.poisoned.at[idx].set(True)
+    return dataclasses.replace(data, x=x, y=y, y_train=y_train, mask=mask,
+                               sizes=sizes, poisoned=poisoned)

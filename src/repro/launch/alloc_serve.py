@@ -133,7 +133,19 @@ class AllocRequest:
 
 @dataclass
 class AllocResult:
-    """Per-request allocation, in the request's own client order."""
+    """Per-request allocation, in the request's own client order.
+
+    ``status`` is the graceful-degradation contract (ISSUE-7 satellite):
+      * ``"ok"``         — solved, ``feasible=True``.
+      * ``"infeasible"`` — solved, but the equilibrium violates the
+        deadline/resource box (``feasible=False``); the allocation arrays
+        are still the solver's best answer — the caller decides whether
+        to use, relax, or drop the cell.
+      * ``"rejected"``   — never dispatched (e.g. N exceeds the largest
+        bucket); allocation arrays are NaN, ``error`` says why.  A bad
+        request yields a structured row instead of killing the in-flight
+        stream.
+    """
     rid: int
     n: int
     bucket: int
@@ -148,6 +160,8 @@ class AllocResult:
     feasible: bool
     iterations: int
     latency_s: float           # submit → result available on host
+    status: str = "ok"
+    error: str = ""
 
 
 @dataclass
@@ -203,9 +217,32 @@ class AllocationService:
         raise ValueError(f"request with {n} clients exceeds the largest "
                          f"bucket {self.buckets[-1]}; widen `buckets`")
 
+    def _reject(self, req: AllocRequest, n: int, why: str) -> int:
+        """Graceful degradation: a request the service cannot dispatch
+        becomes a structured per-request error row (status="rejected",
+        NaN allocation) instead of an exception that kills the in-flight
+        stream.  Malformed LOCAL input (empty request, unknown scheme)
+        still raises from ``submit`` — those are caller bugs, not stream
+        conditions."""
+        rid = self._next_rid
+        self._next_rid += 1
+        nanv = np.full((max(n, 0),), np.nan, np.float32)
+        self._done.append(AllocResult(
+            rid=rid, n=n, bucket=0, scheme=req.scheme,
+            p=nanv, q=nanv.copy(), f=nanv.copy(), alpha=nanv.copy(),
+            rates=nanv.copy(), t_total=float("nan"), energy=float("nan"),
+            feasible=False, iterations=0, latency_s=0.0,
+            status="rejected", error=why))
+        self.stats["rejected"] += 1
+        return rid
+
     def submit(self, req: AllocRequest) -> int:
         """Enqueue one request; returns its rid.  Flushes the bucket as
-        soon as it holds ``max_batch`` requests."""
+        soon as it holds ``max_batch`` requests.
+
+        A request whose N exceeds the largest bucket is not dispatchable:
+        it completes immediately as a ``status="rejected"`` result (see
+        ``AllocResult``) rather than raising into the stream."""
         if req.scheme not in SERVE_SCHEMES:
             raise ValueError(f"unknown scheme {req.scheme!r}; "
                              f"expected one of {SERVE_SCHEMES}")
@@ -213,6 +250,10 @@ class AllocationService:
         n = h2.shape[0]
         if n == 0:
             raise ValueError("empty request (0 clients)")
+        if n > self.buckets[-1]:
+            return self._reject(
+                req, n, f"request with {n} clients exceeds the largest "
+                        f"bucket {self.buckets[-1]}; widen `buckets`")
         nb = self.bucket_for(n)
         order = np.argsort(-h2, kind="stable")      # SIC decode order
         d = np.broadcast_to(np.asarray(req.d, np.float32), (n,))[order]
@@ -282,6 +323,7 @@ class AllocationService:
             inv = np.empty_like(r.order)
             inv[r.order] = np.arange(r.n)        # SIC order → request order
             unsort = lambda a: np.ascontiguousarray(a[i, :r.n][inv])
+            feasible = bool(host["feasible"][i])
             self._done.append(AllocResult(
                 rid=r.rid, n=r.n, bucket=nb, scheme=r.req.scheme,
                 p=unsort(host["p"]), q=unsort(host["q"]),
@@ -289,10 +331,15 @@ class AllocationService:
                 rates=unsort(host["rates"]),
                 t_total=float(host["t_total"][i]),
                 energy=float(host["energy"][i]),
-                feasible=bool(host["feasible"][i]),
+                feasible=feasible,
                 iterations=int(host["iterations"][i]),
-                latency_s=now - r.t_submit))
+                latency_s=now - r.t_submit,
+                status="ok" if feasible else "infeasible",
+                error="" if feasible else
+                      "equilibrium violates the deadline/resource box"))
             self.stats["completed"] += 1
+            if not feasible:
+                self.stats["infeasible"] += 1
 
     def drain(self) -> list:
         """Flush all partial batches, retire all in-flight dispatches, and

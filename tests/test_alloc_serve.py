@@ -190,3 +190,50 @@ class TestScheduler:
         svc.submit(AllocRequest(h2=_draw(4, seed=2)))
         (res,) = svc.drain()
         assert res.latency_s > 0.0
+
+
+class TestGracefulDegradation:
+    """ISSUE-7 satellite: undispatchable or infeasible requests come back
+    as structured per-request rows instead of exceptions that kill the
+    in-flight stream."""
+
+    def test_overflow_rejected_not_fatal(self):
+        """An N > largest-bucket request mid-stream yields a
+        status='rejected' NaN row; the surrounding requests still solve."""
+        svc = AllocationService(buckets=(8,), max_batch=2)
+        ra = svc.submit(AllocRequest(h2=_draw(4, seed=31), epsilon=EPS))
+        rbad = svc.submit(AllocRequest(h2=_draw(9, seed=32), epsilon=EPS))
+        rb = svc.submit(AllocRequest(h2=_draw(5, seed=33), epsilon=EPS))
+        res = {r.rid: r for r in svc.drain()}
+        assert len(res) == 3
+        bad = res[rbad]
+        assert bad.status == "rejected"
+        assert "exceeds the largest bucket" in bad.error
+        assert bad.n == 9 and not bad.feasible
+        assert np.all(np.isnan(bad.p)) and np.isnan(bad.energy)
+        assert svc.stats["rejected"] == 1
+        for rid in (ra, rb):
+            assert res[rid].status == "ok"
+            assert np.all(np.isfinite(res[rid].p))
+
+    def test_ok_status_on_normal_request(self):
+        svc = AllocationService(buckets=(8,))
+        svc.submit(AllocRequest(h2=_draw(4, seed=2), epsilon=EPS))
+        (res,) = svc.drain()
+        assert res.status == "ok" and res.error == "" and res.feasible
+
+    def test_infeasible_tagged_not_fatal(self):
+        """A cell whose deadline cannot be met solves to feasible=False and
+        is tagged status='infeasible' — the allocation is still returned
+        (the solver's best answer) and the stream keeps running."""
+        svc = AllocationService(buckets=(8,), max_batch=2)
+        tight = GameConfig(t_max=1e-4)             # unmeetable deadline
+        r_bad = svc.submit(AllocRequest(h2=_draw(4, seed=41), cfg=tight,
+                                        epsilon=EPS))
+        r_ok = svc.submit(AllocRequest(h2=_draw(4, seed=42), epsilon=EPS))
+        res = {r.rid: r for r in svc.drain()}
+        assert res[r_bad].status == "infeasible"
+        assert not res[r_bad].feasible
+        assert "deadline" in res[r_bad].error
+        assert svc.stats["infeasible"] == 1
+        assert res[r_ok].status == "ok" and res[r_ok].feasible
