@@ -30,19 +30,31 @@ Writes ``BENCH_equilibrium.json`` (repo root) so later PRs can track the
 throughput trajectory (``scripts/check_bench.py`` gates on it); the legacy
 path is measured on a subsample at large K (it is the slow baseline —
 running it 1024× would dominate the bench).
+
+Scaling
+-------
+The ``scaling`` section measures the vmap tier (``batched_equilibrium``,
+K=8192 Monte-Carlo draws on the 1D draw mesh) and the sweep tier
+(``sweep_equilibrium``, C=10 × K=2048 on the 2D (cfg, draw) mesh) at 1, 2
+and 4 forced host devices, each in its own worker subprocess
+(``--scaling-worker D``).  Both tiers are efficiency-gated at ≥70% by
+``scripts/check_bench.py`` and carry sharded-vs-per-instance parity
+(≤1e-5).  On this 1-core container the quotient measures sharding-overhead
+retention, not wall-clock speedup — see ``benchmarks/common.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import os
+import sys
 import time
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from .common import mc_channel_draws
+from .common import (emit_scaling_rows, mc_channel_draws, scaling_section)
 
 N_CLIENTS = 5
 K_VALUES = (1, 64, 1024)
@@ -60,6 +72,8 @@ N_INTERPRET = (64, 128)  # Pallas-interpret validation path timed only at
                          # op-by-op — a correctness tier, not a perf tier)
 SWEEP_TMAX = (4.0, 6.0, 8.0, 10.0, 12.0)
 SWEEP_MBITS = (0.5e6, 2.0e6)     # × SWEEP_TMAX → the 10-point fig9 grid
+SCALING_VMAP_K = 8192            # draws in the scaling vmap tier
+SCALING_SWEEP = (10, 2048)       # (C, K) of the scaling sweep tier
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_equilibrium.json")
 
@@ -84,6 +98,7 @@ def _sweep_section():
     engine (one compile for the whole grid)."""
     from repro.core.stackelberg import (GameConfig, TRACE_COUNTS, _solve,
                                         sharding_layout, sweep_equilibrium)
+    from repro.sharding import game_mesh
     base = GameConfig()
     configs = [dataclasses.replace(base, t_max=tm, model_bits=mb)
                for mb in SWEEP_MBITS for tm in SWEEP_TMAX]
@@ -140,6 +155,7 @@ def _sweep_section():
         "sweep_recompiles": int(recompiles),
         "devices": len(jax.devices()),
         "k_axis_shards": sharding_layout(SWEEP_K),
+        "grid_shards": list(game_mesh.grid_layout(len(configs), SWEEP_K)),
     }
 
 
@@ -263,6 +279,60 @@ def _n_scaling_large_section():
     return rows
 
 
+def scaling_workload():
+    """One ``--scaling-worker`` pass at the current (forced) device count:
+    warm rates for the vmap and sweep tiers plus sharded-vs-per-instance
+    parity on sampled draws (host numpy — sharded and single-device
+    outputs live on different meshes and cannot mix in one jnp op)."""
+    import numpy as np
+    from repro.core.stackelberg import (GameConfig, equilibrium,
+                                        sweep_equilibrium)
+    cfg = GameConfig()
+    rows = {}
+
+    k = SCALING_VMAP_K
+    h2, d, vmax = _inputs(k)
+    # reps=5: the warm dispatch is ~8 ms, so the best-of needs more draws
+    # than the default 3 for a stable efficiency quotient on 1 core
+    _, warm_s, out = _time_batched(cfg, h2, d, vmax, reps=5)
+    en = np.asarray(jax.device_get(out.energy))
+    rel = 0.0
+    for i in np.linspace(0, k - 1, 4).astype(int):
+        ref = float(equilibrium(cfg, h2[i], d[i], vmax[i]).energy)
+        rel = max(rel, abs(float(en[i]) - ref) / max(abs(ref), 1e-12))
+    rows["vmap"] = {
+        "workload": f"batched_equilibrium K={k} N={N_CLIENTS}",
+        "rate": _rate(warm_s, k),
+        "parity_max_rel": float(rel),
+    }
+
+    c, ks = SCALING_SWEEP
+    configs = [dataclasses.replace(cfg, t_max=tm, model_bits=mb)
+               for mb in SWEEP_MBITS for tm in SWEEP_TMAX][:c]
+    h2s = mc_channel_draws(jax.random.PRNGKey(5150), ks, N_CLIENTS)
+    d1 = jnp.full((N_CLIENTS,), 200.0)
+    vm1 = jnp.full((N_CLIENTS,), 0.5)
+    out = sweep_equilibrium(configs, h2s, d1, vm1)
+    jax.block_until_ready(out.energy)
+    warm_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        out = sweep_equilibrium(configs, h2s, d1, vm1)
+        jax.block_until_ready(out.energy)
+        warm_s = min(warm_s, time.perf_counter() - t0)
+    en = np.asarray(jax.device_get(out.energy))
+    rel = 0.0
+    for ci, ki in ((0, 0), (c // 2, ks // 2), (c - 1, ks - 1)):
+        ref = float(equilibrium(configs[ci], h2s[ki], d1, vm1).energy)
+        rel = max(rel, abs(float(en[ci, ki]) - ref) / max(abs(ref), 1e-12))
+    rows["sweep"] = {
+        "workload": f"sweep_equilibrium C={c} K={ks} N={N_CLIENTS}",
+        "rate": _rate(warm_s, c * ks),
+        "parity_max_rel": float(rel),
+    }
+    return rows
+
+
 def run():
     from repro.core.stackelberg import (GameConfig, batched_equilibrium,
                                         equilibrium, equilibrium_eager)
@@ -330,11 +400,17 @@ def run():
     # one n_scaling section: the historical small-N sequential profile rows
     # followed by the large-N sequential-vs-blocked head-to-head rows
     n_scaling = _n_scaling_section() + _n_scaling_large_section()
+    # noise at the 0.15 cap: the warm K=8192 vmap dispatch is ~8 ms, so
+    # best-of-5 timings still swing ~±0.1 efficiency on this 1-core box
+    # (measured 0.58–0.85 across quiet back-to-back worker runs)
+    scaling = scaling_section("benchmarks.equilibrium_throughput",
+                              gate_tiers=("vmap", "sweep"),
+                              efficiency_noise=0.15)
 
     with open(BENCH_JSON, "w") as f:
         json.dump({"bench": "stackelberg_equilibrium_throughput",
                    "results": results, "sweep": sweep,
-                   "n_scaling": n_scaling}, f, indent=2)
+                   "n_scaling": n_scaling, "scaling": scaling}, f, indent=2)
 
     elapsed_us = (time.perf_counter() - t_start) * 1e6
     big = results[-1]
@@ -352,9 +428,16 @@ def run():
              f"blocked_vs_seq_n{big_n['N']}="
              f"{big_n['speedup_blocked_vs_seq']}x;"
              f"blocked_vs_seq_n{big_n['N']}_k1="
-             f"{big_n['speedup_blocked_vs_seq_k1']}x")]
+             f"{big_n['speedup_blocked_vs_seq_k1']}x;"
+             f"scaling_eff_vmap="
+             f"{scaling['tiers']['vmap']['efficiency_at_max']:.2f};"
+             f"scaling_eff_sweep="
+             f"{scaling['tiers']['sweep']['efficiency_at_max']:.2f}")]
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(row)
+    if "--scaling-worker" in sys.argv:
+        emit_scaling_rows(scaling_workload())
+    else:
+        for row in run():
+            print(row)

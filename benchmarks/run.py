@@ -10,17 +10,26 @@ micro-benchmarks.  Prints ``name,us_per_call,derived`` CSV.
         # trajectory + config-grid sweep tiers, writes BENCH_training.json
     PYTHONPATH=src python -m benchmarks.run --only fig5          # one figure
         # (fig5 / fig6 / fig78 each run + gate individually the same way)
+    PYTHONPATH=src python -m benchmarks.run --devices 4          # re-exec
+        # with 4 forced host devices (see benchmarks/common.py) before any
+        # suite loads jax — every suite then runs sharded
 
 Unknown ``--only`` names are an error (they used to silently run nothing).
+The summary (stdout + ``runs/bench/summary.csv``) ends with ``#``-comment
+rows recording the device count and per-suite wall-clock seconds.
 """
 from __future__ import annotations
 
 import argparse
 import os
 import sys
+import time
 import traceback
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from . import common  # noqa: F401  applies --devices/REPRO_FORCE_DEVICES
+                      # (re-exec) before any suite initializes jax
 
 SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
           "equilibrium", "training", "robustness")
@@ -30,6 +39,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=",".join(SUITES),
                     help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--devices", type=int, default=None,
+                    help="forced host device count (consumed pre-jax by "
+                         "benchmarks.common; listed here for --help)")
     args = ap.parse_args()
     wanted = set(filter(None, args.only.split(",")))
     unknown = wanted - set(SUITES)
@@ -41,9 +53,11 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     rows = []
+    suite_walls = []
     for suite in SUITES:
         if suite not in wanted:
             continue
+        t_suite = time.perf_counter()
         try:
             if suite == "fig4":
                 from . import fig4_dinkelbach as mod
@@ -72,10 +86,19 @@ def main() -> None:
         except Exception:  # noqa: BLE001
             print(f"{suite},NaN,ERROR", flush=True)
             traceback.print_exc()
+        suite_walls.append((suite, time.perf_counter() - t_suite))
+
+    import jax
+    footer = [f"# devices,{len(jax.devices())}"]
+    footer += [f"# suite_wall_s,{suite},{wall:.1f}"
+               for suite, wall in suite_walls]
+    for line in footer:
+        print(line, flush=True)
     os.makedirs("runs/bench", exist_ok=True)
     with open("runs/bench/summary.csv", "w") as f:
         f.write("name,us_per_call,derived\n")
         f.write("\n".join(rows) + "\n")
+        f.write("\n".join(footer) + "\n")
 
 
 if __name__ == "__main__":

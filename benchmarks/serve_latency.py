@@ -36,18 +36,35 @@ join/drop every round, so cell sizes vary request to request):
                               measured number).
 
 Run:  PYTHONPATH=src python benchmarks/serve_latency.py
+      PYTHONPATH=src python -m benchmarks.serve_latency --devices 4
+
+Scaling
+-------
+The ``scaling`` section replays a shorter mixed-N trace at 1, 2 and 4
+forced host devices (``--scaling-worker D`` subprocesses): the service
+shards its fixed ``[B, n_bucket]`` dispatch batch over the draw mesh, so
+the section records the sustained request rate and padded-vs-exact
+parity per device count.  Serving is latency-bound by the host round
+trip, not device compute, so this tier is NOT efficiency-gated — the
+rates document overhead, the parity and zero-retrace fields are the
+contract.  On a 1-core container the rates measure sharding overhead
+only — see ``benchmarks/common.py``.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 import numpy as np
 
 import jax.numpy as jnp
 
-from common import timed  # noqa: F401  (path bootstrap side effect)
+try:
+    from .common import emit_scaling_rows, scaling_section, timed  # noqa: F401
+except ImportError:  # run as a bare script: benchmarks/ is sys.path[0]
+    from common import emit_scaling_rows, scaling_section, timed  # noqa: F401
 
 from repro.core.fl_round import allocate_batched
 from repro.core.stackelberg import GameConfig
@@ -64,10 +81,13 @@ D_BITS, V_MAX, EPS = 200.0, 0.5, 0.05
 PARITY_EVERY = 25          # re-solve every k-th request exactly
 
 
-def make_trace(rng):
+SCALING_TRACE_LEN = 64     # shorter trace replayed per scaling worker
+
+
+def make_trace(rng, length: int = TRACE_LEN):
     """The mixed-N arrival trace: (n, h2, t_max) per request."""
     reqs = []
-    for _ in range(TRACE_LEN):
+    for _ in range(length):
         u = rng.random()
         if u < 0.5:
             n = int(rng.integers(1, 9))          # small cells
@@ -94,6 +114,42 @@ def exact_solve(h2, t_max):
     return {"p": np.asarray(out.p)[0][inv], "q": np.asarray(out.q)[0][inv],
             "f": np.asarray(out.f)[0][inv],
             "energy": float(out.energy[0]), "t_total": float(out.t_total[0])}
+
+
+def scaling_workload():
+    """One ``--scaling-worker`` pass at the current (forced) device count:
+    warm sustained rate over a short mixed-N trace, zero-retrace assert,
+    and padded-vs-exact parity on a subsample."""
+    rng = np.random.default_rng(TRACE_SEED + 1)
+    trace = make_trace(rng, SCALING_TRACE_LEN)
+    svc = AllocationService(buckets=BUCKETS, max_batch=MAX_BATCH,
+                            max_inflight=2)
+    svc.warmup(schemes=("proposed",))
+    before = TRACE_COUNTS["serve_allocation"]
+    t0 = time.perf_counter()
+    for n, h2, t_max in trace:
+        svc.submit(AllocRequest(h2=h2, d=D_BITS, v_max=V_MAX,
+                                cfg=GameConfig(t_max=t_max), epsilon=EPS))
+    results = sorted(svc.drain(), key=lambda r: r.rid)
+    wall_s = time.perf_counter() - t0
+    retraces = TRACE_COUNTS["serve_allocation"] - before
+    assert retraces == 0, f"scaling stream retraced {retraces}x"
+    parity = 0.0
+    for rid in range(0, SCALING_TRACE_LEN, 8):
+        _, h2, t_max = trace[rid]
+        ref = exact_solve(h2, t_max)
+        got = results[rid]
+        for f in ("p", "q", "f"):
+            a, b = np.asarray(getattr(got, f), np.float64), ref[f]
+            parity = max(parity, float(np.max(
+                np.abs(a - b) / np.maximum(np.abs(b), 1e-12))))
+    return {"serve": {
+        "workload": f"mixed-N stream len={SCALING_TRACE_LEN} "
+                    f"max_batch={MAX_BATCH} shards={svc.shards}",
+        "rate": SCALING_TRACE_LEN / max(wall_s, 1e-12),
+        "parity_max_rel": parity,
+        "retraces_after_warm": int(retraces),
+    }}
 
 
 def main():
@@ -147,6 +203,10 @@ def main():
         "parity_max_rel": parity,
         "dispatches": int(svc.stats["dispatches"]),
         "padded_slots": int(svc.stats["padded_slots"]),
+        "batch_shards": int(svc.shards),
+        "batch_width": int(svc.batch_width),
+        "scaling": scaling_section("benchmarks.serve_latency",
+                                   gate_tiers=()),
     }
     out = os.path.join(REPO_ROOT, "BENCH_serve.json")
     with open(out, "w") as f:
@@ -157,4 +217,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    if "--scaling-worker" in sys.argv:
+        emit_scaling_rows(scaling_workload())
+    else:
+        main()

@@ -27,15 +27,30 @@ scan of seed s, ≤ 1e-5 rel — the acceptance criterion).
 Writes ``BENCH_training.json`` (repo root) so later PRs can track the
 trajectory-throughput trend; ``scripts/check_bench.py`` gates the compiled
 tiers (scan/vmap rounds/sec) at −20% vs the committed baseline.
+
+Scaling
+-------
+The ``scaling`` section measures the vmap tier (``batched_training``,
+S=8 seeds on the 1D draw mesh) and the sweep tier (``sweep_training``,
+C=6 × S=4 on the 2D (cfg, draw) mesh) at R=10 rounds across 1, 2 and 4
+forced host devices, each in its own worker subprocess
+(``--scaling-worker D``).  Both tiers are efficiency-gated at ≥70% by
+``scripts/check_bench.py`` and carry sharded-vs-``run_training_scan``
+cell parity (≤1e-5).  On this 1-core container the quotient measures
+sharding-overhead retention, not wall-clock speedup — see
+``benchmarks/common.py``.
 """
 from __future__ import annotations
 
 import json
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
+
+from .common import emit_scaling_rows, scaling_section
 
 ROUNDS = 50
 SEEDS = 8
@@ -43,6 +58,7 @@ HOST_ROUNDS = 10          # host-loop rounds actually timed (slow baseline)
 M, CAP, HIDDEN, NSEL = 12, 64, 32, 4
 SWEEP_C, SWEEP_S, SWEEP_R = 6, 4, 20   # the figure-grid sweep workload
 SWEEP_HOST_ROUNDS = 6     # per-cell host-loop rounds timed (extrapolated)
+SCALING_R = 10            # rounds per scaling-tier trajectory
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_training.json")
 
@@ -81,6 +97,7 @@ def _sweep_section(per_seed, data, logits_fn):
                                      sweep_training)
     from repro.core.stackelberg import (GameConfig, TRACE_COUNTS,
                                         sharding_layout)
+    from repro.sharding import game_mesh
     fls = [FLConfig(n_selected=NSEL, local_steps=10, server_steps=10,
                     lr=lr, epsilon=eps)
            for lr, eps in ((0.1, 0.0), (0.08, 0.1), (0.12, 0.2),
@@ -161,9 +178,81 @@ def _sweep_section(per_seed, data, logits_fn):
         "run_round_traces_sweep": int(sweep_traces),
         "eps_grid_retraces": int(eps_retraces),
         "grid_axis_shards": sharding_layout(SWEEP_C * SWEEP_S),
+        "grid_shards": list(game_mesh.grid_layout(SWEEP_C, SWEEP_S)),
         "sweep_max_rel_vs_percell": sweep_rel,
         "sweep_matches_percell_1e5": bool(sweep_rel <= 1e-5),
     }
+
+
+def scaling_workload():
+    """One ``--scaling-worker`` pass at the current (forced) device count:
+    warm rates for the vmap (S=8) and sweep (C=6 × S=4) tiers at R=10,
+    plus sharded-vs-``run_training_scan`` cell parity (host numpy —
+    sharded and single-device outputs live on different meshes)."""
+    import dataclasses
+    import numpy as np
+    from repro.core.fl_round import (FLConfig, batched_training,
+                                     run_training_scan, stack_states,
+                                     sweep_training)
+    from repro.core.stackelberg import GameConfig
+    r = SCALING_R
+    game = GameConfig()
+    fl = FLConfig(n_selected=NSEL, local_steps=10, server_steps=10, lr=0.1)
+    per_seed = [_setup(s) for s in range(SEEDS)]
+    data, logits_fn = per_seed[0][1], per_seed[0][2]
+    states = stack_states([s for s, _, _ in per_seed])
+    rows = {}
+
+    def ref_acc(state, flc, gc):
+        _, ref = run_training_scan(state, data, flc, gc, logits_fn, r)
+        return np.asarray(jax.device_get(ref["val_acc"]))
+
+    _, bout = batched_training(states, data, fl, game, logits_fn, r)
+    jax.block_until_ready(bout["val_acc"])
+    warm_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, bout = batched_training(states, data, fl, game, logits_fn, r)
+        jax.block_until_ready(bout["val_acc"])
+        warm_s = min(warm_s, time.perf_counter() - t0)
+    acc = np.asarray(jax.device_get(bout["val_acc"]))
+    rel = 0.0
+    for s in (0, SEEDS - 1):
+        ref = ref_acc(per_seed[s][0], fl, game)
+        rel = max(rel, float(np.max(np.abs(acc[s] - ref)
+                                    / np.maximum(np.abs(ref), 1e-12))))
+    rows["vmap"] = {
+        "workload": f"batched_training S={SEEDS} R={r}",
+        "rate": _rate(warm_s, SEEDS * r),
+        "parity_max_rel": rel,
+    }
+
+    fls = [dataclasses.replace(fl, lr=lr, epsilon=eps)
+           for lr, eps in ((0.1, 0.0), (0.08, 0.1), (0.12, 0.2),
+                           (0.1, 0.3), (0.06, 0.0), (0.1, 0.45))]
+    games = [dataclasses.replace(game, t_max=t)
+             for t in (8.0, 9.0, 10.0, 11.0, 12.0, 10.5)]
+    states4 = stack_states([s for s, _, _ in per_seed[:SWEEP_S]])
+    _, sw = sweep_training(states4, data, fls, games, logits_fn, r)
+    jax.block_until_ready(sw["val_acc"])
+    warm_s = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        _, sw = sweep_training(states4, data, fls, games, logits_fn, r)
+        jax.block_until_ready(sw["val_acc"])
+        warm_s = min(warm_s, time.perf_counter() - t0)
+    acc = np.asarray(jax.device_get(sw["val_acc"]))
+    rel = 0.0
+    for c, s in ((0, 0), (SWEEP_C - 1, SWEEP_S - 1)):
+        ref = ref_acc(per_seed[s][0], fls[c], games[c])
+        rel = max(rel, float(np.max(np.abs(acc[c, s] - ref)
+                                    / np.maximum(np.abs(ref), 1e-12))))
+    rows["sweep"] = {
+        "workload": f"sweep_training C={SWEEP_C} S={SWEEP_S} R={r}",
+        "rate": _rate(warm_s, SWEEP_C * SWEEP_S * r),
+        "parity_max_rel": rel,
+    }
+    return rows
 
 
 def run():
@@ -230,6 +319,8 @@ def run():
             jnp.maximum(jnp.abs(ref["val_acc"]), 1e-12))))
 
     sweep = _sweep_section(per_seed, data, logits_fn)
+    scaling = scaling_section("benchmarks.training_throughput",
+                              gate_tiers=("vmap", "sweep"))
 
     doc = {
         "bench": "fl_training_trajectory_throughput",
@@ -254,6 +345,7 @@ def run():
         "vmap_max_rel_vs_sequential": vmap_rel,
         "vmap_matches_sequential_1e5": bool(vmap_rel <= 1e-5),
         "sweep": sweep,
+        "scaling": scaling,
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(doc, f, indent=2)
@@ -272,9 +364,16 @@ def run():
              f"{sweep['speedup_sweep_vs_percell_host']}x;"
              f"sweep_target_4x_met="
              f"{sweep['speedup_sweep_vs_percell_host'] >= 4};"
-             f"sweep_matches_percell={sweep['sweep_matches_percell_1e5']}")]
+             f"sweep_matches_percell={sweep['sweep_matches_percell_1e5']};"
+             f"scaling_eff_vmap="
+             f"{scaling['tiers']['vmap']['efficiency_at_max']:.2f};"
+             f"scaling_eff_sweep="
+             f"{scaling['tiers']['sweep']['efficiency_at_max']:.2f}")]
 
 
 if __name__ == "__main__":
-    for row in run():
-        print(row)
+    if "--scaling-worker" in sys.argv:
+        emit_scaling_rows(scaling_workload())
+    else:
+        for row in run():
+            print(row)

@@ -30,6 +30,19 @@ Tracked bench files and their gated metrics (higher is better):
     the slow references, and their host-side dispatch overhead is the
     noisiest number in the file.)
 
+Scaling gate: bench files may carry a ``scaling`` section (written by the
+1/2/4-forced-host-device harness in ``benchmarks/common.py``).  When
+present it is gated three ways: (1) every tier named in its
+``efficiency_gate_tiers`` (the sweep/vmap tiers; serve records rates but
+is latency-bound and not efficiency-gated) must hold
+``efficiency_at_max ≥ min_efficiency − efficiency_noise`` (declared in
+the section itself — default 70% minus the declared container-noise
+margin, capped at 15 pts); (2) every tier's sharded-vs-single-device
+``parity_max_rel`` must be ≤ 1e-5 (the multi-device numerics contract is
+a hard gate, never noise-excused); (3) a bench whose committed baseline
+has a ``scaling`` section but whose current file lost it FAILS — scaling
+coverage must not silently disappear.
+
 Tolerance: the default gate is a >20% drop.  A bench file may override
 per metric via a top-level ``"tolerances": {"<label>": 0.35, ...}``
 object (this container's timing noise is recorded at ±30% — see
@@ -154,6 +167,45 @@ def _tolerance_for(label: str, cur, ref) -> float:
     return TOLERANCE
 
 
+PARITY_LIMIT = 1e-5       # sharded == single-device numerics contract
+NOISE_CAP = 0.15          # a declared efficiency_noise can't excuse more
+
+
+def _check_scaling(cur, ref) -> tuple:
+    """Gate the ``scaling`` section (see module docstring): efficiency of
+    the declared gate tiers, sharded-vs-single-device parity of every
+    tier, and loss of the section itself vs the committed baseline."""
+    failures, lines = [], []
+    sec = cur.get("scaling")
+    if sec is None:
+        if ref.get("scaling") is not None:
+            lines.append("  scaling: section MISSING from current bench "
+                         "(baseline has one) REGRESSED")
+            failures.append("scaling")
+        return failures, lines
+    min_eff = float(sec.get("min_efficiency", 0.70))
+    noise = min(float(sec.get("efficiency_noise", 0.0)), NOISE_CAP)
+    gate_tiers = set(sec.get("efficiency_gate_tiers", ()))
+    for tier, row in sorted((sec.get("tiers") or {}).items()):
+        parity = row.get("parity_max_rel")
+        if parity is None or float(parity) > PARITY_LIMIT:
+            lines.append(f"  scaling.{tier}: parity_max_rel={parity} "
+                         f"(limit {PARITY_LIMIT}) BROKEN")
+            failures.append(f"scaling:{tier}:parity")
+        if tier not in gate_tiers:
+            continue
+        eff = row.get("efficiency_at_max")
+        floor = min_eff - noise
+        if eff is None or float(eff) < floor:
+            lines.append(f"  scaling.{tier}: efficiency_at_max={eff} "
+                         f"< {min_eff:.0%} - {noise:.0%} noise REGRESSED")
+            failures.append(f"scaling:{tier}:efficiency")
+        else:
+            lines.append(f"  scaling.{tier}: efficiency_at_max="
+                         f"{float(eff):.2f} (floor {floor:.2f}) ok")
+    return failures, lines
+
+
 def _check_claims(cur) -> tuple:
     """Gate the bench file's own headline claims: every boolean under the
     top-level ``claims`` object must be true.  Non-boolean entries are
@@ -230,6 +282,9 @@ def _check_one(name: str, metrics_fn, remeasure=None, k: int = 2):
                      f"{status}")
         if status == "REGRESSED":
             failures.append(f"{name}:{label}")
+    scaling_failures, scaling_lines = _check_scaling(cur, ref)
+    lines.extend(scaling_lines)
+    failures.extend(f"{name}:{c}" for c in scaling_failures)
     claim_failures, claim_lines = _check_claims(cur)
     lines.extend(claim_lines)
     failures.extend(f"{name}:claim:{c}" for c in claim_failures)

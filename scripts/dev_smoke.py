@@ -201,8 +201,46 @@ assert TRACE_COUNTS["run_round"] - _before == 1, "fault grid retraced"
 print(f"fault grid OK: 2 scenarios x S=2 x R=2, 1 trace, "
       f"dropped={int(jnp.sum(_fgrid['n_dropped']))}")
 
-# benchmark regression gate (no-op when BENCH json / git baseline is absent)
-import pathlib, subprocess, sys
+# multi-device smoke (ISSUE 8): 4 forced host devices, a C=3 × K=5 sweep
+# on the 2D (cfg, draw) mesh — non-divisible axes pad + slice back, the
+# grid still traces exactly ONCE, and cells match per-instance solves.
+# Subprocess: the XLA device count is fixed at jax import.
+import os, pathlib, subprocess, sys
 _root = pathlib.Path(__file__).resolve().parents[1]
+_MD_SMOKE = r"""
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.channel import sample_sic_channel_batch
+from repro.core.stackelberg import (GameConfig, TRACE_COUNTS, equilibrium,
+                                    sweep_equilibrium)
+assert len(jax.devices()) == 4, jax.devices()
+h2 = sample_sic_channel_batch(jax.random.PRNGKey(7), 5, 5)
+d = jnp.full((5,), 200.0); vm = jnp.full((5,), 0.5)
+cfgs = [dataclasses.replace(GameConfig(), t_max=t) for t in (6., 9., 12.)]
+before = TRACE_COUNTS["sweep_equilibrium"]
+sw = sweep_equilibrium(cfgs, h2, d, vm)
+assert TRACE_COUNTS["sweep_equilibrium"] - before == 1, "sweep retraced"
+en = np.asarray(jax.device_get(sw.energy))
+assert en.shape == (3, 5), en.shape
+ref = float(equilibrium(cfgs[1], h2[2], d, vm).energy)
+rel = abs(float(en[1, 2]) - ref) / max(abs(ref), 1e-12)
+assert rel <= 1e-5, rel
+print("MULTIDEVICE_SMOKE_OK")
+"""
+_env = dict(os.environ)
+_env["PYTHONPATH"] = (str(_root / "src") + os.pathsep +
+                      _env.get("PYTHONPATH", ""))
+_env["XLA_FLAGS"] = " ".join(
+    [f for f in _env.get("XLA_FLAGS", "").split()
+     if not f.startswith("--xla_force_host_platform_device_count")]
+    + ["--xla_force_host_platform_device_count=4"])
+_proc = subprocess.run([sys.executable, "-c", _MD_SMOKE], env=_env,
+                       capture_output=True, text=True, timeout=420)
+assert _proc.returncode == 0, _proc.stderr[-2000:]
+assert "MULTIDEVICE_SMOKE_OK" in _proc.stdout
+print("multi-device sweep OK: 4 forced devices, C=3 x K=5, 1 trace")
+
+# benchmark regression gate (no-op when BENCH json / git baseline is absent)
 subprocess.run([sys.executable, str(_root / "scripts" / "check_bench.py")],
                check=True)

@@ -58,7 +58,11 @@ from typing import Callable, Dict, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
 from ..data.federated import FedData
+from ..sharding import game_mesh
 from . import reputation as rep
 from .aggregation import dt_aggregate, fedavg
 from .digital_twin import dt_feature_noise, split_mapping_mask
@@ -521,21 +525,33 @@ def _training_scan_jit(phys, state, data, ops, fops, *, rounds, **static):
     return jax.lax.scan(body, state, None, length=rounds)
 
 
-@partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
+@partial(jax.jit,
+         static_argnames=_TRAINING_STATIC + ("data_batched", "shards"))
 def _batched_training_jit(phys, states, data, ops, fops, *, rounds,
-                          data_batched, **static):
+                          data_batched, shards=1, **static):
     TRACE_COUNTS["batched_training"] += 1
 
-    def scan_one(st, dt):
-        def body(carry, _):
-            TRACE_COUNTS["run_round"] += 1
-            return _round_body(carry, dt, phys, ops, fops=fops, **static)
+    def run(ph, sts, dt, op, fo):
+        def scan_one(st, d1):
+            def body(carry, _):
+                TRACE_COUNTS["run_round"] += 1
+                return _round_body(carry, d1, ph, op, fops=fo, **static)
 
-        return jax.lax.scan(body, st, None, length=rounds)
+            return jax.lax.scan(body, st, None, length=rounds)
 
-    if data_batched:
-        return jax.vmap(scan_one)(states, data)
-    return jax.vmap(lambda st: scan_one(st, data))(states)
+        if data_batched:
+            return jax.vmap(scan_one)(sts, dt)
+        return jax.vmap(lambda st: scan_one(st, dt))(sts)
+
+    if shards > 1:
+        # each device scans its local seed block independently (no
+        # collectives — the trajectories never talk to each other)
+        dspec = P(game_mesh.DRAW_AXIS) if data_batched else P()
+        run = shard_map(run, mesh=game_mesh.mesh_1d(shards),
+                        in_specs=(P(), P(game_mesh.DRAW_AXIS), dspec,
+                                  P(), P()),
+                        out_specs=P(game_mesh.DRAW_AXIS), check_rep=False)
+    return run(phys, states, data, ops, fops)
 
 
 def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
@@ -606,11 +622,23 @@ def stack_fl_ops(fls: Sequence[FLConfig], dtype=jnp.float32) -> Dict:
 
 def _shard_tree(tree, size: int):
     """``_shard_axis`` over every leaf of a pytree (leading batch/grid
-    axis) — the shared sharding recipe of ``batched_training`` (seed axis)
-    and ``sweep_training`` (flattened C×S grid axis)."""
+    axis) — the legacy GSPMD placement recipe, kept for external callers;
+    the training tiers now pad + ``shard_map`` via ``game_mesh``."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     return jax.tree_util.tree_unflatten(
         treedef, _shard_axis(tuple(leaves), axis=0, size=size))
+
+
+def _unpad_result(final, metrics, *dims):
+    """Slice a training result's leading axes back to the caller's
+    logical sizes (no-op when the batch axes weren't padded)."""
+    probe = jax.tree_util.tree_leaves(final)[0]
+    if tuple(probe.shape[:len(dims)]) == dims:
+        return final, metrics
+    sl = tuple(slice(0, d) for d in dims)
+    cut = lambda x: x[sl]
+    return (jax.tree_util.tree_map(cut, final),
+            jax.tree_util.tree_map(cut, metrics))
 
 
 def batched_training(states: FLState, data: FedData, fl: FLConfig,
@@ -635,35 +663,67 @@ def batched_training(states: FLState, data: FedData, fl: FLConfig,
     states, phys, ops, fops = _prep(states, fl, game, faults)
     data_batched = data.x.ndim == 4
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
-    states = _shard_tree(states, s)
-    if data_batched:
-        data = _shard_tree(data, s)
-    return _batched_training_jit(phys, states, data, ops, fops,
-                                 rounds=rounds, data_batched=data_batched,
-                                 **_static_kwargs(fl, game, logits_fn))
+    shards = game_mesh.batch_shards(s)
+    if shards > 1:
+        sp = game_mesh.padded_size(s, shards)
+        states = game_mesh.put_tree(game_mesh.pad_tree(states, 0, sp),
+                                    0, shards)
+        if data_batched:
+            data = game_mesh.put_tree(game_mesh.pad_tree(data, 0, sp),
+                                      0, shards)
+    final, metrics = _batched_training_jit(
+        phys, states, data, ops, fops, rounds=rounds,
+        data_batched=data_batched, shards=shards,
+        **_static_kwargs(fl, game, logits_fn))
+    return _unpad_result(final, metrics, s)
 
 
-@partial(jax.jit, static_argnames=_TRAINING_STATIC + ("data_batched",))
+@partial(jax.jit,
+         static_argnames=_TRAINING_STATIC + ("data_mode", "grid_shards"))
 def _sweep_training_jit(phys, states, data, ops, fops, *, rounds,
-                        data_batched, **static):
-    """vmap of the scanned trajectory over the FLATTENED C×S grid axis:
-    physics, FL ops and fault ops are mapped per grid cell (unlike the
-    seed-only vmap, which broadcasts them), so one executable covers the
-    whole config grid.  ``fops=None`` (an empty pytree under vmap) compiles
-    the fault-free grid program."""
+                        data_mode, grid_shards=(1, 1), **static):
+    """Nested vmap of the scanned trajectory over the TRUE 2D C×S grid —
+    config axis outer (physics/FL ops/fault ops mapped per point), seed
+    axis inner — so one executable covers the whole config grid and the
+    grid tiles directly onto the 2D (cfg, draw) device mesh.  ``fops=None``
+    (an empty pytree under vmap) compiles the fault-free grid program.
+
+    ``data_mode`` keys how the dataset rides the grid: ``"shared"`` (one
+    dataset for every cell), ``"seed"`` (leading [S] axis, shared across
+    configs) or ``"config"`` (leading [C] axis, shared across seeds)."""
     TRACE_COUNTS["sweep_training"] += 1
 
-    def scan_cell(ph, op, fo, st, dt):
-        def body(carry, _):
-            TRACE_COUNTS["run_round"] += 1
-            return _round_body(carry, dt, ph, op, fops=fo, **static)
+    def grid(ph_c, sts, dt, op_c, fo_c):
+        def per_config(ph, st_s, d_c, op, fo):
+            def scan_cell(st, d1):
+                def body(carry, _):
+                    TRACE_COUNTS["run_round"] += 1
+                    return _round_body(carry, d1, ph, op, fops=fo, **static)
 
-        return jax.lax.scan(body, st, None, length=rounds)
+                return jax.lax.scan(body, st, None, length=rounds)
 
-    if data_batched:
-        return jax.vmap(scan_cell)(phys, ops, fops, states, data)
-    return jax.vmap(lambda ph, op, fo, st: scan_cell(ph, op, fo, st, data))(
-        phys, ops, fops, states)
+            if data_mode == "seed":
+                return jax.vmap(scan_cell)(st_s, d_c)      # d_c is [S, ...]
+            return jax.vmap(lambda st: scan_cell(st, d_c))(st_s)
+
+        data_in = 0 if data_mode == "config" else None
+        return jax.vmap(per_config, in_axes=(0, 0, data_in, 0, 0))(
+            ph_c, sts, dt, op_c, fo_c)
+
+    dc, dk = grid_shards
+    if dc * dk > 1:
+        # 2D (cfg, draw) mesh: each device owns a [C/dc, S/dk] grid tile;
+        # seed-shared data splits along draw only, config-shared along cfg
+        dspec = {"shared": P(), "seed": P(game_mesh.DRAW_AXIS),
+                 "config": P(game_mesh.CFG_AXIS)}[data_mode]
+        cfg_p = P(game_mesh.CFG_AXIS)
+        grid = shard_map(grid, mesh=game_mesh.mesh_2d(dc, dk),
+                         in_specs=(cfg_p,
+                                   P(game_mesh.CFG_AXIS, game_mesh.DRAW_AXIS),
+                                   dspec, cfg_p, cfg_p),
+                         out_specs=P(game_mesh.CFG_AXIS, game_mesh.DRAW_AXIS),
+                         check_rep=False)
+    return grid(phys, states, data, ops, fops)
 
 
 def _sweep_fault_ops(faults, c: int, dtype) -> FaultOps | None:
@@ -720,9 +780,11 @@ def sweep_training(states: FLState, data: FedData, fls, games,
              presence is the only structural compile flag; every knob is
              traced, so the whole attack grid shares one executable.
 
-    The C×S grid is flattened and device-sharded through the same
-    ``sharding_layout``/``NamedSharding`` machinery as the K axis of the
-    equilibrium sweeps (single-device no-op).  Returns
+    The C×S grid is a true 2D layout tiled over the (cfg, draw) device
+    mesh of ``sharding/game_mesh.py`` — the same machinery as the C×K
+    grid of the equilibrium sweeps; non-divisible grids pad with
+    edge-replicated cells that are sliced off the result (single-device
+    no-op).  Returns
     ``(final_states, metrics)`` with a leading ``(C, S)`` prefix on every
     leaf — cell (c, s) equals ``run_training_scan`` with configs c on seed
     s alone (pure batching).
@@ -761,41 +823,43 @@ def sweep_training(states: FLState, data: FedData, fls, games,
     ops = stack_fl_ops(fls, dtype)                # [C] / [C, 3] leaves
     fops = _sweep_fault_ops(faults, c, dtype)     # [C] leaves (or None)
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
-    g = c * s
 
-    # flatten the C×S grid: config points repeat per seed, seeds tile per
-    # config — row c*S+s of the grid is (config c, seed s)
-    rep_cfg = lambda x: jnp.repeat(x, s, axis=0)
-    tile_seed = lambda x: jnp.broadcast_to(
-        x[None], (c,) + x.shape).reshape((g,) + x.shape[1:])
-    phys = jax.tree_util.tree_map(rep_cfg, phys)
-    ops = {k: rep_cfg(v) for k, v in ops.items()}
-    fops = jax.tree_util.tree_map(rep_cfg, fops)
-    states = jax.tree_util.tree_map(tile_seed, states)
-    data_batched = data.x.ndim == 4
-    if data_batched:
-        if data_axis == "config":
-            if data.x.shape[0] != c:
-                raise ValueError(
-                    f"data_axis='config' needs a leading [{c}] axis on the "
-                    f"data (one dataset per config point); got "
-                    f"{data.x.shape[0]}")
-            data = jax.tree_util.tree_map(rep_cfg, data)
-        else:
-            data = jax.tree_util.tree_map(tile_seed, data)
+    # the states grid is TRUE 2D — [C, S, ...] leaves, configs outer,
+    # seeds inner — so it tiles directly onto the (cfg, draw) device mesh
+    bcast_cfg = lambda x: jnp.broadcast_to(x[None], (c,) + x.shape)
+    states = jax.tree_util.tree_map(bcast_cfg, states)
+    if data.x.ndim == 4:
+        data_mode = data_axis
+        if data_axis == "config" and data.x.shape[0] != c:
+            raise ValueError(
+                f"data_axis='config' needs a leading [{c}] axis on the "
+                f"data (one dataset per config point); got "
+                f"{data.x.shape[0]}")
+    else:
+        data_mode = "shared"
 
-    # device-shard the flattened grid axis (single-device no-op)
-    phys = _shard_tree(phys, g)
-    ops = _shard_tree(ops, g)
-    fops = None if fops is None else _shard_tree(fops, g)
-    states = _shard_tree(states, g)
-    if data_batched:
-        data = _shard_tree(data, g)
+    # multi-device: pad the grid to the (dc, dk) mesh factorization with
+    # edge-replicated cells (sliced back off below) and place the shards
+    grid = game_mesh.grid_layout(c, s)
+    dc, dk = grid
+    if dc * dk > 1:
+        cp = game_mesh.padded_size(c, dc)
+        sp = game_mesh.padded_size(s, dk)
+        pad_cfg = lambda t: game_mesh.pad_tree(t, 0, cp)
+        phys = game_mesh.put_grid_tree(pad_cfg(phys), grid, cfg_only=True)
+        ops = game_mesh.put_grid_tree(pad_cfg(ops), grid, cfg_only=True)
+        if fops is not None:
+            fops = game_mesh.put_grid_tree(pad_cfg(fops), grid,
+                                           cfg_only=True)
+        states = game_mesh.put_grid_tree(
+            game_mesh.pad_tree(pad_cfg(states), 1, sp), grid)
+        if data_mode == "seed":
+            data = game_mesh.pad_tree(data, 0, sp)
+        elif data_mode == "config":
+            data = pad_cfg(data)
 
     final, metrics = _sweep_training_jit(
         phys, states, data, ops, fops, rounds=rounds,
-        data_batched=data_batched,
+        data_mode=data_mode, grid_shards=grid,
         **_static_kwargs(fls[0], games[0], logits_fn))
-    unflat = lambda x: x.reshape((c, s) + x.shape[1:])
-    return (jax.tree_util.tree_map(unflat, final),
-            {k: unflat(v) for k, v in metrics.items()})
+    return _unpad_result(final, metrics, c, s)

@@ -56,8 +56,11 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from . import noma
+from ..sharding import game_mesh
 from .channel import BANDWIDTH_HZ, noise_power
 from .dinkelbach import dinkelbach_power
 from .sic import SIC_MODES, successive_power_any
@@ -150,37 +153,26 @@ def stack_physics(configs: Sequence[GameConfig],
 
 
 # ---------------------------------------------------------------------------
-# device sharding of the Monte-Carlo axis
+# device sharding — unified mesh layer (see sharding/game_mesh.py)
 # ---------------------------------------------------------------------------
-def sharding_layout(k: int) -> int:
-    """Number of devices the K axis is split across: the largest divisor of
-    K within the available device count (1 ⇒ single-device fallback)."""
-    n_dev = len(jax.devices())
-    if n_dev <= 1 or k <= 0:
-        return 1
-    return max(d for d in range(1, n_dev + 1) if k % d == 0)
+# Batched/sweep tiers pad their batch axes to a device multiple
+# (edge-replicated lanes, sliced off the outputs by ``_unpad``) and run
+# under ``shard_map`` — one independent while_loop per device — instead
+# of GSPMD hints, whose global convergence predicate serializes devices.
+# ``sharding_layout``/``_shard_axis`` remain as the legacy placement API
+# (bench reporting, external callers).
+sharding_layout = game_mesh.layout_1d
+_shard_axis = game_mesh.put_axis
+_CFG, _DRAW = game_mesh.CFG_AXIS, game_mesh.DRAW_AXIS
 
 
-@lru_cache(maxsize=64)
-def _axis_sharding(n_dev: int, axis: int):
-    """Cached NamedSharding splitting axis ``axis`` over ``n_dev`` devices
-    (mesh construction is not free and batched dispatches are hot)."""
-    mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:n_dev]), ("k",))
-    spec = jax.sharding.PartitionSpec(*([None] * axis), "k")
-    return jax.sharding.NamedSharding(mesh, spec)
-
-
-def _shard_axis(arrays: tuple, axis: int, size: int) -> tuple:
-    """device_put each array with the size-``size`` axis ``axis`` sharded
-    across devices (NamedSharding); jit then partitions the vmapped solve
-    via GSPMD.  No-op on a single device or when K has no useful divisor."""
-    n_dev = sharding_layout(size)
-    if n_dev <= 1:
-        return arrays
-    ns = _axis_sharding(n_dev, axis)
-    return tuple(jax.device_put(a, ns)
-                 if a.ndim > axis and a.shape[axis] == size else a
-                 for a in arrays)
+def _unpad(alloc: "Allocation", *dims: int) -> "Allocation":
+    """Slice a batched/sweep ``Allocation``'s leading axes back to the
+    caller's logical sizes (no-op when nothing was padded)."""
+    if tuple(alloc.v.shape[:len(dims)]) == dims:
+        return alloc
+    sl = tuple(slice(0, d) for d in dims)
+    return jax.tree_util.tree_map(lambda x: x[sl], alloc)
 
 
 # ---------------------------------------------------------------------------
@@ -404,26 +396,47 @@ def _equilibrium_jit(phys, h2_sorted, D, v_max, epsilon, tol, max_iter,
                   sic_mode)
 
 
-@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
+@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode", "shards"))
 def _batched_equilibrium_jit(phys, h2_batch, D_batch, v_max_batch, epsilon,
-                             tol, max_iter, inner, sic_mode):
+                             tol, max_iter, inner, sic_mode, shards=1):
     TRACE_COUNTS["batched_equilibrium"] += 1
-    solve1 = lambda h2, d, vm: _solve(phys, h2, d, vm, epsilon, max_iter,
-                                      tol, inner, sic_mode)
-    return jax.vmap(solve1)(h2_batch, D_batch, v_max_batch)
+
+    def vsolve(ph, h2, d, vm, eps, tl):
+        solve1 = lambda hh, dd, vv: _solve(ph, hh, dd, vv, eps, max_iter,
+                                           tl, inner, sic_mode)
+        return jax.vmap(solve1)(h2, d, vm)
+
+    if shards > 1:
+        # one independent while_loop per device over its local K block
+        vsolve = shard_map(vsolve, mesh=game_mesh.mesh_1d(shards),
+                           in_specs=(P(), P(_DRAW), P(_DRAW), P(_DRAW),
+                                     P(), P()),
+                           out_specs=P(_DRAW), check_rep=False)
+    return vsolve(phys, h2_batch, D_batch, v_max_batch, epsilon, tol)
 
 
-@partial(jax.jit, static_argnames=("max_iter", "inner", "sic_mode"))
+@partial(jax.jit,
+         static_argnames=("max_iter", "inner", "sic_mode", "grid_shards"))
 def _sweep_equilibrium_jit(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c, tol,
-                           max_iter, inner, sic_mode):
+                           max_iter, inner, sic_mode, grid_shards=(1, 1)):
     TRACE_COUNTS["sweep_equilibrium"] += 1
 
-    def solve_config(ph, h2_kn, d_kn, vm_kn, eps):
-        solve1 = lambda h2, d, vm: _solve(ph, h2, d, vm, eps, max_iter,
-                                          tol, inner, sic_mode)
-        return jax.vmap(solve1)(h2_kn, d_kn, vm_kn)
+    def sweep(ph_c, h2_c, d_c, vm_c, eps_c, tl):
+        def solve_config(ph, h2_kn, d_kn, vm_kn, eps):
+            solve1 = lambda h2, d, vm: _solve(ph, h2, d, vm, eps, max_iter,
+                                              tl, inner, sic_mode)
+            return jax.vmap(solve1)(h2_kn, d_kn, vm_kn)
 
-    return jax.vmap(solve_config)(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c)
+        return jax.vmap(solve_config)(ph_c, h2_c, d_c, vm_c, eps_c)
+
+    dc, dk = grid_shards
+    if dc * dk > 1:
+        # 2D (cfg, draw) mesh: each device owns a [C/dc, K/dk] grid tile
+        sweep = shard_map(sweep, mesh=game_mesh.mesh_2d(dc, dk),
+                          in_specs=(P(_CFG), P(_CFG, _DRAW), P(_CFG, _DRAW),
+                                    P(_CFG, _DRAW), P(_CFG), P()),
+                          out_specs=P(_CFG, _DRAW), check_rep=False)
+    return sweep(phys, h2_cbn, D_cbn, v_max_cbn, epsilon_c, tol)
 
 
 @lru_cache(maxsize=512)
@@ -459,22 +472,33 @@ def _canon_single(cfg: GameConfig, h2_sorted, D, v_max, epsilon, tol):
 
 def _canon_batch(cfg: GameConfig, h2_batch, D_batch, v_max_batch, epsilon,
                  tol, shard: bool = True):
+    """Normalize batched operands to [K, N] and, on multi-device
+    processes, pad K to a device multiple + place the shards.  Returns
+    the operands plus ``(shards, k)`` so the entry point can pick the
+    shard_map specialization and ``_unpad`` the result."""
     h2_batch = jnp.asarray(h2_batch)
     dtype = jnp.result_type(h2_batch)
     k, n = h2_batch.shape
     D_batch = jnp.broadcast_to(jnp.asarray(D_batch, dtype), (k, n))
     v_max_batch = jnp.broadcast_to(jnp.asarray(v_max_batch, dtype), (k, n))
-    if shard:
-        h2_batch, D_batch, v_max_batch = _shard_axis(
-            (h2_batch, D_batch, v_max_batch), axis=0, size=k)
+    shards = game_mesh.batch_shards(k) if shard else 1
+    if shards > 1:
+        kp = game_mesh.padded_size(k, shards)
+        h2_batch, D_batch, v_max_batch = game_mesh.put_batch(
+            tuple(game_mesh.pad_axis(a, 0, kp)
+                  for a in (h2_batch, D_batch, v_max_batch)),
+            axis=0, shards=shards)
     return (_physics_cached(cfg, dtype), h2_batch, D_batch, v_max_batch,
-            _as_operand(epsilon, dtype), _as_operand(tol, dtype))
+            _as_operand(epsilon, dtype), _as_operand(tol, dtype), shards, k)
 
 
 def _canon_sweep(configs: Sequence[GameConfig], h2_batch, D, v_max, epsilon,
                  tol, shard: bool = True):
     """[C]-stack the configs and broadcast operands to [C, K, N]; epsilon
-    may be scalar or [C] (it rides the config axis — fig6's ε sweep)."""
+    may be scalar or [C] (it rides the config axis — fig6's ε sweep).
+    On multi-device processes the C×K grid is padded to the 2D mesh
+    factorization and placed; returns extra ``(grid_shards, c, k)`` for
+    the shard_map specialization + output ``_unpad``."""
     configs = list(configs)
     c = len(configs)
     h2_batch = jnp.asarray(h2_batch)
@@ -485,10 +509,21 @@ def _canon_sweep(configs: Sequence[GameConfig], h2_batch, D, v_max, epsilon,
     D = jnp.broadcast_to(jnp.asarray(D, dtype), (c, k, n))
     v_max = jnp.broadcast_to(jnp.asarray(v_max, dtype), (c, k, n))
     eps = jnp.broadcast_to(jnp.asarray(epsilon, dtype), (c,))
-    if shard:
-        h2_batch, D, v_max = _shard_axis((h2_batch, D, v_max), axis=1, size=k)
-    return (stack_physics(configs, dtype), h2_batch, D, v_max, eps,
-            jnp.asarray(tol, dtype), configs[0].dinkelbach_inner)
+    phys = stack_physics(configs, dtype)
+    grid = game_mesh.grid_layout(c, k) if shard else (1, 1)
+    dc, dk = grid
+    if dc * dk > 1:
+        cp = game_mesh.padded_size(c, dc)
+        kp = game_mesh.padded_size(k, dk)
+        h2_batch, D, v_max = game_mesh.put_grid(
+            tuple(game_mesh.pad_axis(game_mesh.pad_axis(a, 0, cp), 1, kp)
+                  for a in (h2_batch, D, v_max)), grid)
+        eps = game_mesh.put_grid_tree(game_mesh.pad_axis(eps, 0, cp), grid,
+                                      cfg_only=True)
+        phys = game_mesh.put_grid_tree(game_mesh.pad_tree(phys, 0, cp), grid,
+                                       cfg_only=True)
+    return (phys, h2_batch, D, v_max, eps, jnp.asarray(tol, dtype),
+            configs[0].dinkelbach_inner, grid, c, k)
 
 
 def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
@@ -510,6 +545,12 @@ def equilibrium(cfg: GameConfig, h2_sorted, D, v_max, epsilon: float = 0.0,
                             sic_mode=cfg.sic_mode)
 
 
+# NOTE: the batched/sweep tiers below all run their batch axes through
+# ``_canon_batch``/``_canon_sweep``, which pad to a device multiple on
+# multi-device processes — every entry point therefore ``_unpad``s its
+# result back to the caller's logical shape.
+
+
 def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
                         epsilon: float = 0.0, max_iter: int = 20,
                         tol: float = 1e-6) -> Allocation:
@@ -525,12 +566,13 @@ def batched_equilibrium(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
     to one compile + one device dispatch, and the K axis is sharded
     across available devices (no-op on one device).
     """
-    phys, h2, D, vm, eps, tol = _canon_batch(cfg, h2_batch, D_batch,
-                                             v_max_batch, epsilon, tol)
-    return _batched_equilibrium_jit(phys, h2, D, vm, eps, tol,
-                                    max_iter=max_iter,
-                                    inner=cfg.dinkelbach_inner,
-                                    sic_mode=cfg.sic_mode)
+    phys, h2, D, vm, eps, tol, shards, k = _canon_batch(
+        cfg, h2_batch, D_batch, v_max_batch, epsilon, tol)
+    out = _batched_equilibrium_jit(phys, h2, D, vm, eps, tol,
+                                   max_iter=max_iter,
+                                   inner=cfg.dinkelbach_inner,
+                                   sic_mode=cfg.sic_mode, shards=shards)
+    return _unpad(out, k)
 
 
 def sweep_equilibrium(configs: Sequence[GameConfig], h2_batch, D, v_max,
@@ -550,11 +592,13 @@ def sweep_equilibrium(configs: Sequence[GameConfig], h2_batch, D, v_max,
     Returns an ``Allocation`` with a [C, K] leading prefix on every field.
     """
     configs = list(configs)
-    phys, h2, D, vm, eps, tol, inner = _canon_sweep(configs, h2_batch, D,
-                                                    v_max, epsilon, tol)
-    return _sweep_equilibrium_jit(phys, h2, D, vm, eps, tol,
-                                  max_iter=max_iter, inner=inner,
-                                  sic_mode=configs[0].sic_mode)
+    phys, h2, D, vm, eps, tol, inner, grid, c, k = _canon_sweep(
+        configs, h2_batch, D, v_max, epsilon, tol)
+    out = _sweep_equilibrium_jit(phys, h2, D, vm, eps, tol,
+                                 max_iter=max_iter, inner=inner,
+                                 sic_mode=configs[0].sic_mode,
+                                 grid_shards=grid)
+    return _unpad(out, c, k)
 
 
 def equilibrium_eager(cfg: GameConfig, h2_sorted, D, v_max,
@@ -713,26 +757,47 @@ def _random_jit(phys, key, h2, D, v_max, epsilon, inner):
     return _random_body(phys, key, h2, D, v_max, epsilon)
 
 
-@partial(jax.jit, static_argnames=("inner",))
-def _batched_random_jit(phys, keys, h2, D, v_max, epsilon, inner):
+@partial(jax.jit, static_argnames=("inner", "shards"))
+def _batched_random_jit(phys, keys, h2, D, v_max, epsilon, inner, shards=1):
     del inner
     TRACE_COUNTS["batched_random_allocation"] += 1
-    body = lambda kk, h, d, vm: _random_body(phys, kk, h, d, vm, epsilon)
-    return jax.vmap(body)(keys, h2, D, v_max)
+
+    def vbody(ph, kk, h2_b, d_b, vm_b, eps):
+        body = lambda k1, h, d, vm: _random_body(ph, k1, h, d, vm, eps)
+        return jax.vmap(body)(kk, h2_b, d_b, vm_b)
+
+    if shards > 1:
+        vbody = shard_map(vbody, mesh=game_mesh.mesh_1d(shards),
+                          in_specs=(P(), P(_DRAW), P(_DRAW), P(_DRAW),
+                                    P(_DRAW), P()),
+                          out_specs=P(_DRAW), check_rep=False)
+    return vbody(phys, keys, h2, D, v_max, epsilon)
 
 
-@partial(jax.jit, static_argnames=("inner",))
-def _sweep_random_jit(phys, keys, h2, D, v_max, epsilon_c, inner):
+@partial(jax.jit, static_argnames=("inner", "grid_shards"))
+def _sweep_random_jit(phys, keys, h2, D, v_max, epsilon_c, inner,
+                      grid_shards=(1, 1)):
     del inner
     TRACE_COUNTS["sweep_random_allocation"] += 1
 
-    def per_config(ph, h_kn, d_kn, vm_kn, eps):
-        body = lambda kk, h, d, vm: _random_body(ph, kk, h, d, vm, eps)
-        return jax.vmap(body)(keys, h_kn, d_kn, vm_kn)
+    def sweep(ph_c, kk, h2_c, d_c, vm_c, eps_c):
+        def per_config(ph, h_kn, d_kn, vm_kn, eps):
+            body = lambda k1, h, d, vm: _random_body(ph, k1, h, d, vm, eps)
+            return jax.vmap(body)(kk, h_kn, d_kn, vm_kn)
 
-    # keys are shared across the config axis (in_axes=None): every config
-    # point sees the same K channel/key draws, isolating the config effect
-    return jax.vmap(per_config)(phys, h2, D, v_max, epsilon_c)
+        # keys are shared across the config axis (in_axes=None): every
+        # config point sees the same K channel/key draws, isolating the
+        # config effect (a draw-axis device tile still sees the same key
+        # block for each of its config rows)
+        return jax.vmap(per_config)(ph_c, h2_c, d_c, vm_c, eps_c)
+
+    dc, dk = grid_shards
+    if dc * dk > 1:
+        sweep = shard_map(sweep, mesh=game_mesh.mesh_2d(dc, dk),
+                          in_specs=(P(_CFG), P(_DRAW), P(_CFG, _DRAW),
+                                    P(_CFG, _DRAW), P(_CFG, _DRAW), P(_CFG)),
+                          out_specs=P(_CFG, _DRAW), check_rep=False)
+    return sweep(phys, keys, h2, D, v_max, epsilon_c)
 
 
 def _oma_variant(tdma: bool) -> str:
@@ -747,22 +812,40 @@ def _oma_jit(phys, h2, D, v_max, epsilon, inner, tdma):
     return _oma_body(phys, h2, D, v_max, epsilon, inner, tdma)
 
 
-@partial(jax.jit, static_argnames=("inner", "tdma"))
-def _batched_oma_jit(phys, h2, D, v_max, epsilon, inner, tdma):
+@partial(jax.jit, static_argnames=("inner", "tdma", "shards"))
+def _batched_oma_jit(phys, h2, D, v_max, epsilon, inner, tdma, shards=1):
     TRACE_COUNTS["batched_" + _oma_variant(tdma)] += 1
-    body = lambda h, d, vm: _oma_body(phys, h, d, vm, epsilon, inner, tdma)
-    return jax.vmap(body)(h2, D, v_max)
+
+    def vbody(ph, h2_b, d_b, vm_b, eps):
+        body = lambda h, d, vm: _oma_body(ph, h, d, vm, eps, inner, tdma)
+        return jax.vmap(body)(h2_b, d_b, vm_b)
+
+    if shards > 1:
+        vbody = shard_map(vbody, mesh=game_mesh.mesh_1d(shards),
+                          in_specs=(P(), P(_DRAW), P(_DRAW), P(_DRAW), P()),
+                          out_specs=P(_DRAW), check_rep=False)
+    return vbody(phys, h2, D, v_max, epsilon)
 
 
-@partial(jax.jit, static_argnames=("inner", "tdma"))
-def _sweep_oma_jit(phys, h2, D, v_max, epsilon_c, inner, tdma):
+@partial(jax.jit, static_argnames=("inner", "tdma", "grid_shards"))
+def _sweep_oma_jit(phys, h2, D, v_max, epsilon_c, inner, tdma,
+                   grid_shards=(1, 1)):
     TRACE_COUNTS["sweep_" + _oma_variant(tdma)] += 1
 
-    def per_config(ph, h_kn, d_kn, vm_kn, eps):
-        body = lambda h, d, vm: _oma_body(ph, h, d, vm, eps, inner, tdma)
-        return jax.vmap(body)(h_kn, d_kn, vm_kn)
+    def sweep(ph_c, h2_c, d_c, vm_c, eps_c):
+        def per_config(ph, h_kn, d_kn, vm_kn, eps):
+            body = lambda h, d, vm: _oma_body(ph, h, d, vm, eps, inner, tdma)
+            return jax.vmap(body)(h_kn, d_kn, vm_kn)
 
-    return jax.vmap(per_config)(phys, h2, D, v_max, epsilon_c)
+        return jax.vmap(per_config)(ph_c, h2_c, d_c, vm_c, eps_c)
+
+    dc, dk = grid_shards
+    if dc * dk > 1:
+        sweep = shard_map(sweep, mesh=game_mesh.mesh_2d(dc, dk),
+                          in_specs=(P(_CFG), P(_CFG, _DRAW), P(_CFG, _DRAW),
+                                    P(_CFG, _DRAW), P(_CFG)),
+                          out_specs=P(_CFG, _DRAW), check_rep=False)
+    return sweep(phys, h2, D, v_max, epsilon_c)
 
 
 def random_allocation(cfg: GameConfig, key, h2_sorted, D, v_max,
@@ -778,11 +861,14 @@ def batched_random_allocation(cfg: GameConfig, key, h2_batch, D_batch,
     """K random allocations in one XLA call; per-draw keys are
     ``jax.random.split(key, K)``, so row i reproduces
     ``random_allocation(cfg, jax.random.split(key, K)[i], …)`` exactly."""
-    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
-                                           v_max_batch, epsilon, 0.0)
-    keys = jax.random.split(key, h2.shape[0])
-    return _batched_random_jit(phys, keys, h2, D, vm, eps,
-                               inner=cfg.dinkelbach_inner)
+    phys, h2, D, vm, eps, _, shards, k = _canon_batch(
+        cfg, h2_batch, D_batch, v_max_batch, epsilon, 0.0)
+    # split with the LOGICAL k (row i must reproduce the documented
+    # per-instance key exactly), then pad keys to the device multiple
+    keys = game_mesh.pad_axis(jax.random.split(key, k), 0, h2.shape[0])
+    out = _batched_random_jit(phys, keys, h2, D, vm, eps,
+                              inner=cfg.dinkelbach_inner, shards=shards)
+    return _unpad(out, k)
 
 
 def sweep_random_allocation(configs: Sequence[GameConfig], key, h2_batch, D,
@@ -790,10 +876,12 @@ def sweep_random_allocation(configs: Sequence[GameConfig], key, h2_batch, D,
     """C configs × K draws of the random baseline in one call.  The K
     per-draw keys are shared across the config axis (each config point sees
     identical randomness, isolating the config effect)."""
-    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
-                                                  v_max, epsilon, 0.0)
-    keys = jax.random.split(key, h2.shape[1])
-    return _sweep_random_jit(phys, keys, h2, D, vm, eps, inner=inner)
+    phys, h2, D, vm, eps, _, inner, grid, c, k = _canon_sweep(
+        configs, h2_batch, D, v_max, epsilon, 0.0)
+    keys = game_mesh.pad_axis(jax.random.split(key, k), 0, h2.shape[1])
+    out = _sweep_random_jit(phys, keys, h2, D, vm, eps, inner=inner,
+                            grid_shards=grid)
+    return _unpad(out, c, k)
 
 
 def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
@@ -813,18 +901,21 @@ def oma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
 def batched_oma_allocation(cfg: GameConfig, h2_batch, D_batch, v_max_batch,
                            epsilon: float = 0.0) -> Allocation:
     """K OMA-FDMA allocations in one XLA call (K axis device-sharded)."""
-    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
-                                           v_max_batch, epsilon, 0.0)
-    return _batched_oma_jit(phys, h2, D, vm, eps,
-                            inner=cfg.dinkelbach_inner, tdma=False)
+    phys, h2, D, vm, eps, _, shards, k = _canon_batch(
+        cfg, h2_batch, D_batch, v_max_batch, epsilon, 0.0)
+    out = _batched_oma_jit(phys, h2, D, vm, eps, inner=cfg.dinkelbach_inner,
+                           tdma=False, shards=shards)
+    return _unpad(out, k)
 
 
 def sweep_oma_allocation(configs: Sequence[GameConfig], h2_batch, D, v_max,
                          epsilon=0.0) -> Allocation:
     """C configs × K draws of the OMA-FDMA baseline in one call."""
-    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
-                                                  v_max, epsilon, 0.0)
-    return _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=False)
+    phys, h2, D, vm, eps, _, inner, grid, c, k = _canon_sweep(
+        configs, h2_batch, D, v_max, epsilon, 0.0)
+    out = _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=False,
+                         grid_shards=grid)
+    return _unpad(out, c, k)
 
 
 def oma_tdma_allocation(cfg: GameConfig, h2_sorted, D, v_max,
@@ -841,18 +932,21 @@ def batched_oma_tdma_allocation(cfg: GameConfig, h2_batch, D_batch,
                                 v_max_batch,
                                 epsilon: float = 0.0) -> Allocation:
     """K OMA-TDMA allocations in one XLA call (K axis device-sharded)."""
-    phys, h2, D, vm, eps, _ = _canon_batch(cfg, h2_batch, D_batch,
-                                           v_max_batch, epsilon, 0.0)
-    return _batched_oma_jit(phys, h2, D, vm, eps,
-                            inner=cfg.dinkelbach_inner, tdma=True)
+    phys, h2, D, vm, eps, _, shards, k = _canon_batch(
+        cfg, h2_batch, D_batch, v_max_batch, epsilon, 0.0)
+    out = _batched_oma_jit(phys, h2, D, vm, eps, inner=cfg.dinkelbach_inner,
+                           tdma=True, shards=shards)
+    return _unpad(out, k)
 
 
 def sweep_oma_tdma_allocation(configs: Sequence[GameConfig], h2_batch, D,
                               v_max, epsilon=0.0) -> Allocation:
     """C configs × K draws of the OMA-TDMA baseline in one call."""
-    phys, h2, D, vm, eps, _, inner = _canon_sweep(configs, h2_batch, D,
-                                                  v_max, epsilon, 0.0)
-    return _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=True)
+    phys, h2, D, vm, eps, _, inner, grid, c, k = _canon_sweep(
+        configs, h2_batch, D, v_max, epsilon, 0.0)
+    out = _sweep_oma_jit(phys, h2, D, vm, eps, inner=inner, tdma=True,
+                         grid_shards=grid)
+    return _unpad(out, c, k)
 
 
 def wo_dt_allocation(cfg: GameConfig, h2_sorted, D) -> Allocation:

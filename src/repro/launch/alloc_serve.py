@@ -53,10 +53,13 @@ import numpy as np
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from ..core.stackelberg import (GameConfig, _oma_body, _random_body, _solve,
                                 stack_physics)
 from ..core.tracking import TRACE_COUNTS
+from ..sharding import game_mesh
 
 DEFAULT_BUCKETS = (8, 16, 32, 64, 128)
 SERVE_SCHEMES = ("proposed", "ideal", "wo_dt", "oma", "oma_tdma", "random")
@@ -65,10 +68,12 @@ SERVE_SCHEMES = ("proposed", "ideal", "wo_dt", "oma", "oma_tdma", "random")
 # ---------------------------------------------------------------------------
 # the bucket executable
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("scheme", "max_iter", "inner", "sic_mode"),
+@partial(jax.jit,
+         static_argnames=("scheme", "max_iter", "inner", "sic_mode",
+                          "shards"),
          donate_argnums=(2, 3, 4, 5))
 def _serve_batch_jit(phys, keys, h2, D, v_max, eps, mask, tol, scheme,
-                     max_iter, inner, sic_mode):
+                     max_iter, inner, sic_mode, shards=1):
     """One padded bucket dispatch: B requests × nb client lanes.
 
     phys  : GamePhysics with [B] leaves (per-request physics knobs)
@@ -88,29 +93,43 @@ def _serve_batch_jit(phys, keys, h2, D, v_max, eps, mask, tol, scheme,
     [B, nb] outputs (p/q/f/alpha/rates) and the [B] scalars.  The
     GamePhysics leaves stay undonated: only two [B] f32 outputs exist
     to absorb eleven [B] leaves, and XLA warns on every unusable one.
+
+    ``shards`` > 1 splits the batch axis over the 1D draw mesh via
+    ``shard_map`` (each device solves its local rows' independent
+    while_loops); the service sizes B to a device multiple, so the
+    split is exact and the executable shape never changes.
     """
     TRACE_COUNTS["serve_allocation"] += 1
 
-    def one(ph, key, h2_r, d_r, vm_r, eps_r, m_r):
-        dtype = jnp.result_type(h2_r)
-        if scheme in ("proposed", "ideal"):
-            return _solve(ph, h2_r, d_r, vm_r, eps_r, max_iter, tol, inner,
-                          sic_mode, mask=m_r)
-        if scheme == "wo_dt":
-            return _solve(ph, h2_r, d_r, jnp.zeros_like(h2_r),
-                          jnp.zeros((), dtype), max_iter, tol, inner,
-                          sic_mode, mask=m_r)
-        if scheme == "oma":
-            return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner, tdma=False,
-                             mask=m_r)
-        if scheme == "oma_tdma":
-            return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner, tdma=True,
-                             mask=m_r)
-        if scheme == "random":
-            return _random_body(ph, key, h2_r, d_r, vm_r, eps_r, mask=m_r)
-        raise ValueError(f"unknown scheme {scheme!r}")
+    def batch(ph_b, kk, h2_b, d_b, vm_b, eps_b, m_b, tl):
+        def one(ph, key, h2_r, d_r, vm_r, eps_r, m_r):
+            dtype = jnp.result_type(h2_r)
+            if scheme in ("proposed", "ideal"):
+                return _solve(ph, h2_r, d_r, vm_r, eps_r, max_iter, tl,
+                              inner, sic_mode, mask=m_r)
+            if scheme == "wo_dt":
+                return _solve(ph, h2_r, d_r, jnp.zeros_like(h2_r),
+                              jnp.zeros((), dtype), max_iter, tl, inner,
+                              sic_mode, mask=m_r)
+            if scheme == "oma":
+                return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner,
+                                 tdma=False, mask=m_r)
+            if scheme == "oma_tdma":
+                return _oma_body(ph, h2_r, d_r, vm_r, eps_r, inner,
+                                 tdma=True, mask=m_r)
+            if scheme == "random":
+                return _random_body(ph, key, h2_r, d_r, vm_r, eps_r,
+                                    mask=m_r)
+            raise ValueError(f"unknown scheme {scheme!r}")
 
-    return jax.vmap(one)(phys, keys, h2, D, v_max, eps, mask)
+        return jax.vmap(one)(ph_b, kk, h2_b, d_b, vm_b, eps_b, m_b)
+
+    if shards > 1:
+        d = P(game_mesh.DRAW_AXIS)
+        batch = shard_map(batch, mesh=game_mesh.mesh_1d(shards),
+                          in_specs=(d,) * 7 + (P(),), out_specs=d,
+                          check_rep=False)
+    return batch(phys, keys, h2, D, v_max, eps, mask, tol)
 
 
 # ---------------------------------------------------------------------------
@@ -200,6 +219,12 @@ class AllocationService:
             raise ValueError(f"bad bucket widths {buckets}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.max_batch = int(max_batch)
+        # multi-device: shard the batch axis of every bucket dispatch —
+        # the fixed dispatch width rounds up to a device multiple once at
+        # init (extra rows are all-masked dummies, same as partial-batch
+        # fill), so the executable shape stays retrace-free
+        self.shards = game_mesh.batch_shards(self.max_batch)
+        self.batch_width = game_mesh.padded_size(self.max_batch, self.shards)
         self.max_inflight = int(max_inflight)
         self.max_iter = int(max_iter)
         self.tol = float(tol)
@@ -275,7 +300,7 @@ class AllocationService:
         if not rows:
             return
         nb, scheme, inner, sic_mode = key
-        b = self.max_batch                      # fixed batch width per
+        b = self.batch_width                    # fixed batch width per
         n_real = len(rows)                      # executable (zero retraces)
         h2 = np.zeros((b, nb), np.float32)
         D = np.zeros((b, nb), np.float32)
@@ -296,7 +321,8 @@ class AllocationService:
         out = _serve_batch_jit(phys, keys, h2, D, vm, eps, mask,
                                jnp.asarray(self.tol, jnp.float32),
                                scheme=scheme, max_iter=self.max_iter,
-                               inner=inner, sic_mode=sic_mode)
+                               inner=inner, sic_mode=sic_mode,
+                               shards=self.shards)
         self._inflight.append(_InFlight(key=key, pending=rows, out=out,
                                         t_dispatch=time.perf_counter()))
         self.stats["dispatches"] += 1

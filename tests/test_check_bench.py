@@ -192,3 +192,82 @@ def test_true_claims_pass(fake_repo):
                       "no_defense_degrades_more": True}}
     _write(root, "BENCH_robustness.json", json.dumps(doc))
     assert check_bench.check(verbose=False) == 0
+
+
+# ---------------------------------------------------------------------------
+# ISSUE-8: the multi-device scaling gate
+# ---------------------------------------------------------------------------
+def _scaling_doc(eff_vmap=0.9, eff_sweep=0.9, parity=1e-7, noise=0.10,
+                 gate=("vmap", "sweep")):
+    return {
+        "requests_per_sec": 100.0,
+        "scaling": {
+            "devices_measured": [1, 2, 4],
+            "host_cores": 1,
+            "normalizer": 1,
+            "efficiency_gate_tiers": list(gate),
+            "min_efficiency": 0.70,
+            "efficiency_noise": noise,
+            "tiers": {
+                "vmap": {"rates_per_s": {"1": 10.0, "2": 10.0, "4": 10.0},
+                         "efficiency_at_max": eff_vmap,
+                         "parity_max_rel": parity},
+                "sweep": {"rates_per_s": {"1": 10.0, "2": 10.0, "4": 10.0},
+                          "efficiency_at_max": eff_sweep,
+                          "parity_max_rel": parity},
+            },
+        },
+    }
+
+
+def test_scaling_efficiency_gate(fake_repo, capsys):
+    """A gate tier below min_efficiency − declared noise fails; one above
+    the floor passes."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", json.dumps(_scaling_doc(eff_vmap=0.55)))
+    assert check_bench.check() == 1
+    assert "scaling:vmap:efficiency" in capsys.readouterr().out
+    _write(root, "BENCH_serve.json", json.dumps(_scaling_doc(eff_vmap=0.65)))
+    assert check_bench.check(verbose=False) == 0   # 0.70 − 0.10 noise floor
+
+
+def test_scaling_noise_margin_is_capped(fake_repo):
+    """A bench cannot declare its way past the gate: efficiency_noise is
+    capped, so 0.40 of declared noise still fails a 0.30 efficiency."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json",
+           json.dumps(_scaling_doc(eff_sweep=0.30, noise=0.40)))
+    assert check_bench.check(verbose=False) == 1
+
+
+def test_scaling_parity_is_a_hard_gate(fake_repo, capsys):
+    """Sharded-vs-single-device drift past 1e-5 fails even on ungated
+    tiers — the numerics contract has no noise excuse."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json",
+           json.dumps(_scaling_doc(parity=3e-4, gate=())))
+    assert check_bench.check() == 1
+    out = capsys.readouterr().out
+    assert "scaling:vmap:parity" in out and "scaling:sweep:parity" in out
+
+
+def test_lost_scaling_section_fails(fake_repo, capsys):
+    """A bench whose baseline carries a scaling section must not silently
+    drop it."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _scaling_doc()
+    _write(root, "BENCH_serve.json", json.dumps({"requests_per_sec": 100.0}))
+    assert check_bench.check() == 1
+    assert "scaling" in capsys.readouterr().out
+
+
+def test_scaling_section_without_baseline_still_gates(fake_repo):
+    """The gate reads the current file's own declared thresholds — a brand
+    new scaling section is gated even before a baseline exists."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = {"requests_per_sec": 100.0}
+    _write(root, "BENCH_serve.json", json.dumps(_scaling_doc(eff_vmap=0.10)))
+    assert check_bench.check(verbose=False) == 1

@@ -1,0 +1,241 @@
+"""Unified mesh layer tests (ISSUE 8 tentpole).
+
+In-process tiers (single device, monkeypatched device counts) cover the
+pure layout math: ``grid_layout`` factorization + padding minimization,
+``layout_1d`` cache keying on the LIVE device count (the stale-cache bug
+this PR fixes), edge-replication padding, and the env/arg override
+precedence of ``device_count``.
+
+Subprocess tiers (via ``tests/_multidevice.py`` — the device count is
+fixed at jax import) cover execution: the 2D (cfg, draw) sweep mesh
+matches the single-device sweep ≤1e-5 across proposed/ideal (ε>0 / ε=0)
+× both ``sic_mode`` families on a NON-divisible C=3 × K=5 grid (remainder
+padding sliced back off), with zero mid-sweep retraces; the serving path
+matches shards=4 vs shards=1 on a mixed-N stream with zero retraces after
+warmup; and an 8-forced-device smoke proves the layer is not hardwired
+to 4.  Cross-mesh comparisons go through host numpy — arrays committed
+to different meshes cannot mix in one jnp op.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from _multidevice import run_forced_devices
+
+from repro.sharding import game_mesh
+
+
+# ---------------------------------------------------------------------------
+# layout math (in-process, fake device counts)
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def fake_devices(monkeypatch):
+    """Patch the visible device count (layout functions only ever take
+    ``len(jax.devices())``); clears the mesh-layer caches around the test
+    so nothing stale leaks in either direction."""
+    def set_count(n):
+        monkeypatch.setattr(jax, "devices", lambda backend=None: [None] * n)
+        game_mesh.clear_cache()
+    yield set_count
+    monkeypatch.undo()
+    game_mesh.clear_cache()
+
+
+def test_layout_1d_keys_on_device_count(fake_devices):
+    """The PR-1 bug: ``sharding_layout`` cached on k alone, so a device
+    count change inside one process returned a stale layout."""
+    fake_devices(1)
+    assert game_mesh.layout_1d(8) == 1
+    fake_devices(4)
+    assert game_mesh.layout_1d(8) == 4       # not the stale 1
+    fake_devices(3)
+    assert game_mesh.layout_1d(8) == 2       # largest divisor ≤ 3
+    fake_devices(1)
+    assert game_mesh.layout_1d(8) == 1
+
+
+def test_grid_layout_minimizes_padding(fake_devices):
+    fake_devices(4)
+    # C=3, K=5: (4, 1) pads to 4×5=20 cells; (2, 2) → 4×6=24; (1, 4) →
+    # 3×8=24 — the minimum-padding factorization wins
+    assert game_mesh.grid_layout(3, 5) == (4, 1)
+    # divisible grid: ties break toward the draw axis (dk largest)
+    assert game_mesh.grid_layout(4, 8) == (1, 4)
+    # degenerate axes fall back to single-device
+    assert game_mesh.grid_layout(0, 8) == (1, 1)
+    fake_devices(1)
+    assert game_mesh.grid_layout(3, 5) == (1, 1)
+
+
+def test_batch_shards_and_padded_size(fake_devices):
+    fake_devices(4)
+    assert game_mesh.batch_shards(8) == 4
+    assert game_mesh.batch_shards(3) == 3     # never an empty shard
+    assert game_mesh.batch_shards(0) == 1
+    assert game_mesh.padded_size(7, 4) == 8
+    assert game_mesh.padded_size(8, 4) == 8
+
+
+def test_device_count_override_precedence(fake_devices, monkeypatch):
+    fake_devices(4)
+    assert game_mesh.device_count() == 4
+    monkeypatch.setenv("REPRO_MESH_DEVICES", "2")
+    assert game_mesh.device_count() == 2      # env caps the default
+    assert game_mesh.device_count(3) == 3     # explicit arg beats env
+    monkeypatch.setenv("REPRO_MESH_DEVICES", "64")
+    assert game_mesh.device_count() == 4      # clamped to what exists
+
+
+def test_pad_axis_edge_replicates():
+    x = np.arange(6.0).reshape(3, 2)
+    out = np.asarray(game_mesh.pad_axis(x, 0, 5))
+    assert out.shape == (5, 2)
+    np.testing.assert_array_equal(out[:3], x)
+    np.testing.assert_array_equal(out[3], x[-1])
+    np.testing.assert_array_equal(out[4], x[-1])
+    # already large enough: no-op
+    assert game_mesh.pad_axis(x, 0, 3).shape == (3, 2)
+
+
+# ---------------------------------------------------------------------------
+# 2D sweep mesh == single-device sweep (forced 4 devices, subprocess)
+# ---------------------------------------------------------------------------
+_SWEEP_2D_SCRIPT = r"""
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.channel import sample_sic_channel_batch
+from repro.core.stackelberg import (GameConfig, TRACE_COUNTS,
+                                    equilibrium, sweep_equilibrium)
+from repro.sharding import game_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+C, K, N = 3, 5, 5                      # NON-divisible on both axes
+assert game_mesh.grid_layout(C, K) == (4, 1)
+h2 = sample_sic_channel_batch(jax.random.PRNGKey(3), K, N)
+d = jnp.full((N,), 200.0); vmax = jnp.full((N,), 0.5)
+
+for sic_mode in ("sequential", "blocked"):
+    for eps in (0.0, 0.05):            # ideal / proposed DT-deviation
+        base = GameConfig(sic_mode=sic_mode)
+        cfgs = [dataclasses.replace(base, t_max=t) for t in (6.0, 9.0, 12.0)]
+        before = TRACE_COUNTS["sweep_equilibrium"]
+        out = sweep_equilibrium(cfgs, h2, d, vmax, epsilon=eps)
+        # one trace per sic_mode family (ε is a traced operand: the second
+        # ε of a family must hit the same executable)
+        want = 1 if eps == 0.0 else 0
+        assert TRACE_COUNTS["sweep_equilibrium"] - before == want, sic_mode
+        en = np.asarray(jax.device_get(out.energy))
+        assert en.shape == (C, K), en.shape    # remainder pad sliced off
+        # re-dispatch with shifted values: zero mid-sweep retraces
+        before = TRACE_COUNTS["sweep_equilibrium"]
+        shifted = [dataclasses.replace(c, t_max=c.t_max + 0.5) for c in cfgs]
+        sweep_equilibrium(shifted, h2, d, vmax, epsilon=eps)
+        assert TRACE_COUNTS["sweep_equilibrium"] - before == 0, sic_mode
+        for c in range(C):
+            for k in range(K):
+                ref = float(equilibrium(cfgs[c], h2[k], d, vmax,
+                                        epsilon=eps).energy)
+                rel = abs(float(en[c, k]) - ref) / max(abs(ref), 1e-12)
+                assert rel <= 1e-5, (sic_mode, eps, c, k, rel)
+print("SWEEP_2D_OK")
+"""
+
+
+def test_sweep_2d_mesh_matches_single_device():
+    """Forced 4 devices: the padded 2D (cfg, draw) sweep equals the
+    per-instance solves ≤1e-5 for proposed/ideal × both sic_mode
+    families, with zero mid-sweep retraces on a value-shifted grid."""
+    run_forced_devices(_SWEEP_2D_SCRIPT, marker="SWEEP_2D_OK",
+                       timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# serving: sharded buckets == unsharded buckets on a mixed-N stream
+# ---------------------------------------------------------------------------
+_SERVE_SCRIPT = r"""
+import os
+import numpy as np
+import jax
+from repro.core.stackelberg import GameConfig
+from repro.core.tracking import TRACE_COUNTS
+from repro.launch.alloc_serve import AllocationService, AllocRequest
+
+assert len(jax.devices()) == 4, jax.devices()
+rng = np.random.default_rng(11)
+trace = []
+for _ in range(12):
+    n = int(rng.integers(1, 17))               # mixed-N stream
+    trace.append((rng.uniform(0.2, 2.0, n).astype(np.float32),
+                  float(rng.uniform(0.8, 1.5))))
+
+def run_stream(shards_env):
+    os.environ["REPRO_MESH_DEVICES"] = shards_env
+    svc = AllocationService(buckets=(8, 16), max_batch=4, max_inflight=2)
+    svc.warmup(schemes=("proposed",))
+    before = TRACE_COUNTS["serve_allocation"]
+    for h2, t_max in trace:
+        svc.submit(AllocRequest(h2=h2, d=200.0, v_max=0.5,
+                                cfg=GameConfig(t_max=t_max), epsilon=0.05))
+    res = sorted(svc.drain(), key=lambda r: r.rid)
+    retraces = TRACE_COUNTS["serve_allocation"] - before
+    assert retraces == 0, f"shards={shards_env} retraced {retraces}x"
+    return svc.shards, res
+
+s1, ref = run_stream("1")
+s4, got = run_stream("4")
+assert s1 == 1 and s4 == 4, (s1, s4)
+for a, b in zip(ref, got):
+    for f in ("p", "q", "f"):
+        x = np.asarray(getattr(a, f), np.float64)
+        y = np.asarray(getattr(b, f), np.float64)
+        rel = float(np.max(np.abs(x - y) / np.maximum(np.abs(x), 1e-12)))
+        assert rel <= 1e-5, (a.rid, f, rel)
+    for f in ("energy", "t_total"):
+        x, y = float(getattr(a, f)), float(getattr(b, f))
+        assert abs(x - y) <= 1e-5 * max(abs(x), 1e-12), (a.rid, f)
+print("SERVE_SHARDED_OK")
+"""
+
+
+def test_serve_sharded_matches_unsharded():
+    """Forced 4 devices: the service with its [B, nb] batch axis sharded
+    4-ways returns the same allocations as shards=1 on a mixed-N stream,
+    and neither stream retraces after warmup."""
+    run_forced_devices(_SERVE_SCRIPT, marker="SERVE_SHARDED_OK",
+                       timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# 8-device smoke: the layer is not hardwired to 4
+# ---------------------------------------------------------------------------
+_SMOKE_8_SCRIPT = r"""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.channel import sample_sic_channel_batch
+from repro.core.stackelberg import GameConfig, batched_equilibrium, equilibrium
+from repro.sharding import game_mesh
+
+assert len(jax.devices()) == 8, jax.devices()
+assert game_mesh.batch_shards(12) == 8       # K=12 pads to 16 over 8
+cfg = GameConfig()
+h2 = sample_sic_channel_batch(jax.random.PRNGKey(5), 12, 5)
+d = jnp.full((5,), 200.0); vmax = jnp.full((5,), 0.5)
+out = batched_equilibrium(cfg, h2, d, vmax)
+en = np.asarray(jax.device_get(out.energy))
+assert en.shape == (12,), en.shape           # pad sliced back off
+for i in (0, 5, 11):
+    ref = float(equilibrium(cfg, h2[i], d, vmax).energy)
+    rel = abs(float(en[i]) - ref) / max(abs(ref), 1e-12)
+    assert rel <= 1e-5, (i, rel)
+print("SMOKE_8_OK")
+"""
+
+
+@pytest.mark.slow
+def test_eight_device_smoke():
+    """Forced 8 devices: non-divisible K=12 batch pads to 16, shards
+    8-ways, and still matches per-instance solves."""
+    run_forced_devices(_SMOKE_8_SCRIPT, devices=8, marker="SMOKE_8_OK",
+                       timeout=600)

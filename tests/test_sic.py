@@ -16,9 +16,6 @@ proofs for the new entry points, and the forced-4-device sharding check
 with the blocked solver.
 """
 import dataclasses
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +24,8 @@ try:
     from hypothesis import given, settings, strategies as st
 except ImportError:   # offline: seeded example replay (tests/_prop.py)
     from _prop import given, settings, strategies as st
+
+from _multidevice import run_forced_devices
 
 from repro.core.channel import noise_power, sample_sic_channel_batch
 from repro.core.dinkelbach import _p_floor, dinkelbach_power, successive_power
@@ -234,9 +233,6 @@ def test_blocked_sweep_traces_each_entry_once():
 
 
 _SHARD_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=4")
 import jax, jax.numpy as jnp
 from repro.core.channel import sample_sic_channel_batch
 from repro.core.stackelberg import (GameConfig, batched_equilibrium,
@@ -258,13 +254,7 @@ print("SHARDED_BLOCKED_OK")
 def test_k_axis_shards_with_blocked_solver():
     """The K axis still device-shards when the blocked SIC engine is the
     solver core (subprocess: device count is fixed at jax import)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=420)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "SHARDED_BLOCKED_OK" in proc.stdout
+    run_forced_devices(_SHARD_SCRIPT, marker="SHARDED_BLOCKED_OK")
 
 
 # ---------------------------------------------------------------------------

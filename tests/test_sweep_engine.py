@@ -11,13 +11,12 @@ tests cannot have pre-warmed the cache and the delta-of-1 is really
 observed, not vacuously 0.
 """
 import dataclasses
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
 import pytest
+
+from _multidevice import run_forced_devices
 
 from repro.core.channel import sample_sic_channel_batch
 from repro.core.stackelberg import (GameConfig, GamePhysics, TRACE_COUNTS,
@@ -165,9 +164,6 @@ def test_sharding_layout_single_device_fallback():
 
 
 _SHARD_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=4")
 import jax, jax.numpy as jnp
 from repro.core.channel import sample_sic_channel_batch
 from repro.core.stackelberg import (GameConfig, batched_equilibrium,
@@ -189,12 +185,6 @@ print("SHARDED_OK")
 
 def test_k_axis_shards_across_forced_host_devices():
     """With 4 forced host devices the K axis splits 4-ways and the sharded
-    batched solve still matches per-instance solves (subprocess: the device
-    count is fixed at jax import)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=420)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "SHARDED_OK" in proc.stdout
+    batched solve still matches per-instance solves (subprocess via
+    tests/_multidevice.py: the device count is fixed at jax import)."""
+    run_forced_devices(_SHARD_SCRIPT, marker="SHARDED_OK")

@@ -10,22 +10,27 @@ Three properties of ``sweep_training``:
     ONCE per (scheme, use_roni, shape), and changing any numeric knob
     (lr, ε, RONI threshold, physics floats) across config points must not
     retrace — only scheme/use_roni/shapes are compile keys;
-  * grid sharding — the flattened C×S axis device-shards through the same
-    ``sharding_layout``/``NamedSharding`` machinery as the equilibrium
-    sweeps (forced-4-device subprocess; single-device no-op elsewhere).
+  * grid sharding — the C×S grid device-shards over the 2D
+    ``game_mesh`` ("cfg", "draw") shard_map layout shared with the
+    equilibrium sweeps (forced-4-device subprocess; single-device no-op
+    elsewhere).
+
+Parity comparisons go through ``jax.device_get``: under forced multi-device
+runs the sweep output lives on the 2D grid mesh while the batched
+reference lives on a 1D batch mesh, and jnp ops refuse to mix meshes.
 
 Shapes here are deliberately unusual (M=9 pool, cap=36, hidden=28) so
 earlier tests cannot have pre-warmed the jit cache and trace deltas are
 real.
 """
 import dataclasses
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 import pytest
+
+from _multidevice import run_forced_devices
 
 from repro.core.channel import sample_positions
 from repro.core.digital_twin import DTConfig, sample_v_max
@@ -77,8 +82,10 @@ def _grid(scheme, use_roni, c=2):
 def _assert_cell_parity(sw, ref, c):
     """Sweep row c against a ``batched_training`` reference (S, R, ...)."""
     for k in SCALAR_METRICS:
-        rel = float(jnp.max(jnp.abs(sw[k][c] - ref[k])
-                            / jnp.maximum(jnp.abs(ref[k]), 1e-12)))
+        got = np.asarray(jax.device_get(sw[k]))[c]
+        want = np.asarray(jax.device_get(ref[k]))
+        rel = float(np.max(np.abs(got - want)
+                           / np.maximum(np.abs(want), 1e-12)))
         assert rel < REL, (c, k, rel)
     for k in INT_METRICS:
         assert sw[k][c].tolist() == ref[k].tolist(), (c, k)
@@ -108,8 +115,9 @@ def test_sweep_matches_sequential_batched(scheme, use_roni):
         for a, b in zip(jax.tree_util.tree_leaves(
                 jax.tree_util.tree_map(lambda x: x[c], fstate)),
                 jax.tree_util.tree_leaves(bstate)):
-            rel = float(jnp.max(jnp.abs(a - b))
-                        / max(float(jnp.max(jnp.abs(b))), 1e-12))
+            a, b = np.asarray(jax.device_get(a)), np.asarray(jax.device_get(b))
+            rel = float(np.max(np.abs(a - b)) / max(float(np.max(np.abs(b))),
+                                                    1e-12))
             assert rel < REL, (scheme, use_roni, c)
 
 
@@ -195,9 +203,6 @@ def test_sweep_config_axis_broadcast_and_mismatch():
 # device sharding of the flattened C×S grid
 # ---------------------------------------------------------------------------
 _SHARD_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=4")
 import jax, jax.numpy as jnp
 from repro.core.channel import sample_positions
 from repro.core.digital_twin import DTConfig, sample_v_max
@@ -249,10 +254,4 @@ def test_grid_shards_across_forced_host_devices():
     """With 4 forced host devices the flattened C×S = 4 grid splits 4-ways
     and every sharded cell still matches its own sequential scan
     (subprocess: the device count is fixed at jax import)."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
-                         + os.pathsep + env.get("PYTHONPATH", ""))
-    proc = subprocess.run([sys.executable, "-c", _SHARD_SCRIPT], env=env,
-                          capture_output=True, text=True, timeout=420)
-    assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "SWEEP_SHARDED_OK" in proc.stdout
+    run_forced_devices(_SHARD_SCRIPT, marker="SWEEP_SHARDED_OK")
