@@ -18,7 +18,16 @@ Tracked bench files and their gated metrics (higher is better):
         ragged-N streaming allocation service under the mixed-N arrival
         trace (``benchmarks/serve_latency.py``; p50/p99 latencies are
         recorded there but not gated — wall-clock percentiles on shared
-        CI hosts are too noisy for a hard gate).
+        CI hosts are too noisy for a hard gate);
+      - ``overload.requests_per_sec`` / ``chaos.requests_per_sec`` — the
+        ISSUE-9 resilience sections (burst overload against the bounded
+        SLA queue; the full_chaos fault-injection scenario), tolerance-
+        declared at ±35% because both paths sleep on purpose.  Gating
+        the rates doubles as a section-presence gate: once the baseline
+        carries them, losing either section fails.  Their headline
+        invariants ride the ``claims`` gate below — no lost requests
+        under overload/chaos, high-priority p99 bounded, no NaN leaking
+        through a ``status="ok"`` row.
   * ``BENCH_robustness.json``
       - ``grid_rounds_per_sec``        — the attack-vs-defense grid
         (``benchmarks/robustness_grid.py``) as sharded sweep dispatches;
@@ -105,6 +114,15 @@ def _serve_metrics(doc) -> dict:
     out = {}
     if doc.get("requests_per_sec") is not None:
         out["requests_per_sec"] = float(doc["requests_per_sec"])
+    # resilience sections (ISSUE 9): gating their rates also makes the
+    # SECTIONS load-bearing — once the committed baseline has them, a
+    # bench that stops reporting overload/chaos fails the missing-metric
+    # rule instead of silently dropping coverage
+    for section, label in (("overload", "overload_rps"),
+                           ("chaos", "chaos_rps")):
+        rate = (doc.get(section) or {}).get("requests_per_sec")
+        if rate is not None:
+            out[label] = float(rate)
     return out
 
 

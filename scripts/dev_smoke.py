@@ -181,6 +181,25 @@ assert TRACE_COUNTS["serve_allocation"] - _before == _touched, \
 print(f"alloc serve OK: {len(_res)} mixed-N requests, "
       f"{_touched} buckets, 1 trace each")
 
+# SLA-resilience smoke (ISSUE 9): a 30-request burst with ONE injected
+# dispatch stall into a bounded-queue SLA service — the exactly-once
+# invariant must hold (every submitted rid drains exactly once, with a
+# status from the contract vocabulary, zero lost)
+from repro.launch.serve_chaos import (ChaosScenario, assert_exactly_once,
+                                      run_chaos)
+
+_burst = ChaosScenario(name="smoke_burst_stall", n_requests=30,
+                       stall_dispatches=(1,), stall_s=0.2,
+                       hi_priority_frac=0.25,
+                       service_kwargs={"max_queue": 16, "max_batch": 4,
+                                       "buckets": (8,)})
+_rep = run_chaos(_burst)
+assert_exactly_once(_rep)
+assert _rep.submitted == 30 and len(_rep.results) == 30
+assert _rep.injection["injected_stalls"] == 1
+print(f"serve resilience OK: 30-request burst + 1 stall, 0 lost, "
+      f"statuses={_rep.status_counts}")
+
 # fault-injection engine: a tiny attack-vs-defense grid — 2 scenarios
 # (clean-gates vs adaptive attacker + straggler storm) × S=2 seeds in ONE
 # sweep dispatch, zero mid-grid retraces (ISSUE 7 smoke).  Every fault

@@ -1,5 +1,6 @@
 """Streaming allocation service: ragged-N continuous batching over the
-masked Stackelberg engine (the ISSUE-6 tentpole).
+masked Stackelberg engine (ISSUE-6 tentpole), wrapped in an SLA-aware
+resilience layer (ISSUE-9 tentpole).
 
 The offline engine answers fixed-N, fixed-K questions; production is an
 *online* stream of heterogeneous cells — every request carries its own
@@ -37,13 +38,78 @@ latency-SLA deployment pays no cold-start on the stream.
 Results come back in the REQUEST'S OWN client order (the service sorts
 into SIC order on the way in and unsorts on the way out).
 
-Latency/throughput numbers for the mixed-N arrival trace live in
-``benchmarks/serve_latency.py`` (→ ``BENCH_serve.json``, gated by
-``scripts/check_bench.py``).
+The SLA / resilience contract (ISSUE 9)
+=======================================
+
+Every submitted rid yields EXACTLY ONE ``AllocResult`` from ``drain()``
+— the exactly-once invariant — with a status from the five-word
+vocabulary:
+
+  * ``"ok"``          — solved, feasible, delivered inside any deadline.
+  * ``"infeasible"``  — solved, but the equilibrium violates the
+    deadline/resource box even after the retry ladder (arrays are the
+    solver's best answer; ``degradation`` records the ladder).
+  * ``"rejected"``    — the service could not produce a valid allocation:
+    oversized N, non-finite channel gains, admission control (predicted
+    queue wait already busts ``deadline_s``), circuit breaker open, or a
+    dispatch that failed after backoff retries.  Arrays are NaN,
+    ``error`` says why.
+  * ``"shed"``        — dropped by priority-ordered load shedding when
+    the bounded queue (``max_queue``) overflowed: the LOWEST-priority,
+    youngest pending request is shed first, never silently.
+  * ``"timeout"``     — solved, but delivered after the request's
+    ``deadline_s`` (or expired in the queue before dispatch).
+
+**Per-request SLA.**  ``AllocRequest.deadline_s`` (submit→result wall
+budget) and ``AllocRequest.priority`` (higher = more important) drive
+three scheduler mechanisms: (1) admission control — an EWMA of measured
+per-(bucket, scheme) dispatch latency predicts the queue wait; a request
+whose deadline the prediction already busts is rejected FAST, before it
+wastes a batch lane; (2) bounded queues — when ``max_queue`` is set the
+service stops blocking the producer (PR-8 behavior) and instead defers
+dispatch while the in-flight window is full, opportunistically retiring
+ready batches (``jax.Array.is_ready`` polling), and sheds the
+lowest-priority pending request once the bound is hit; (3) batches are
+packed highest-priority-first, so under overload high-priority p99
+degrades gracefully while low-priority sheds.
+
+**Degraded-retry.**  An infeasible equilibrium walks a bounded retry
+ladder (default ``("relax_tmax", "fallback_oma")``): first re-solve with
+``t_max × relax_factor`` (a traced operand — same executable, zero
+retrace), then fall back to the cheaper ``oma`` scheme.  Each result
+carries its ``degradation`` trail (e.g. ``("relax_tmax:1.5",
+"fallback:oma")``); ``latency_s`` stays honest (original submit time).
+Transient dispatch FAILURES (the dispatch seam raising) retry with
+exponential backoff up to ``dispatch_retries`` times before the batch's
+requests become structured ``"rejected"`` rows.
+
+**Containment.**  A cooperative watchdog records in-flight batches whose
+dispatch→complete wall exceeds ``watchdog_s`` (counted, fed to the
+breaker — a stalled executable is unhealthy); per-(bucket, scheme)
+circuit breakers trip OPEN after ``breaker_threshold`` consecutive bad
+batches (non-finite outputs, a watchdog trip, a dispatch failure — plus
+all-infeasible batches when ``breaker_on_infeasible`` is opted in:
+infeasibility is a data property and a valid answer, not executable
+ill-health, so it doesn't open the breaker by default), fast-fail
+submissions while open, move to HALF_OPEN
+after ``breaker_cooldown_s`` and close again on the next healthy batch.
+``health()`` snapshots queue depths, breaker states, every resilience
+counter and per-priority p50/p99 latency.
+
+The BASELINE path — no deadline, no ``max_queue``, feasible,
+uncontended — is bit-identical to the PR-8 scheduler: same batch
+composition (priority sort is stable and all-equal), same executables,
+same operands; the resilience layer only adds host-side bookkeeping.
+
+``benchmarks/serve_latency.py`` measures the steady state plus overload
+and chaos sections (→ ``BENCH_serve.json``, claims-gated by
+``scripts/check_bench.py``); ``repro.launch.serve_chaos`` is the
+service-level fault-injection harness.
 """
 from __future__ import annotations
 
 import collections
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from functools import partial
@@ -63,6 +129,7 @@ from ..sharding import game_mesh
 
 DEFAULT_BUCKETS = (8, 16, 32, 64, 128)
 SERVE_SCHEMES = ("proposed", "ideal", "wo_dt", "oma", "oma_tdma", "random")
+STATUS_VOCAB = ("ok", "infeasible", "rejected", "shed", "timeout")
 
 
 # ---------------------------------------------------------------------------
@@ -140,7 +207,14 @@ class AllocRequest:
     """One cell's allocation question.  ``h2`` may arrive in ANY client
     order — the service sorts into SIC order and unsorts the answer.
     ``d`` / ``v_max`` are scalars or per-client [n] arrays aligned with
-    ``h2``'s order."""
+    ``h2``'s order.
+
+    SLA knobs (ISSUE 9): ``deadline_s`` is the submit→result wall budget
+    — admission control reject-fasts when the predicted queue wait
+    already busts it, and a result delivered late is tagged
+    ``status="timeout"``; ``priority`` orders load shedding (lowest shed
+    first) and batch packing (highest packed first); ``allow_degraded``
+    opts this request out of the infeasible retry ladder."""
     h2: object
     d: object = 200.0
     v_max: object = 0.5
@@ -148,23 +222,37 @@ class AllocRequest:
     scheme: str = "proposed"
     epsilon: float = 0.0
     seed: int = 0              # per-request randomness ("random" scheme)
+    deadline_s: float | None = None
+    priority: int = 0
+    allow_degraded: bool = True
 
 
 @dataclass
 class AllocResult:
     """Per-request allocation, in the request's own client order.
 
-    ``status`` is the graceful-degradation contract (ISSUE-7 satellite):
-      * ``"ok"``         — solved, ``feasible=True``.
+    ``status`` is the graceful-degradation contract (STATUS_VOCAB — see
+    the module docstring for the full five-word semantics):
+      * ``"ok"``         — solved, ``feasible=True``, inside deadline.
       * ``"infeasible"`` — solved, but the equilibrium violates the
-        deadline/resource box (``feasible=False``); the allocation arrays
-        are still the solver's best answer — the caller decides whether
-        to use, relax, or drop the cell.
-      * ``"rejected"``   — never dispatched (e.g. N exceeds the largest
-        bucket); allocation arrays are NaN, ``error`` says why.  A bad
-        request yields a structured row instead of killing the in-flight
-        stream.
-    """
+        deadline/resource box (``feasible=False``) even after the retry
+        ladder; the allocation arrays are still the solver's best answer
+        — the caller decides whether to use, relax, or drop the cell.
+      * ``"rejected"``   — no valid allocation: oversized N, non-finite
+        input, admission control, open circuit breaker, failed dispatch,
+        or non-finite solver output.  Arrays are NaN, ``error`` says why.
+      * ``"shed"``       — dropped by priority-ordered load shedding
+        under queue overflow.  A bad or shed request yields a structured
+        row instead of killing the in-flight stream — never silent loss.
+      * ``"timeout"``    — completed (or expired in queue) after
+        ``deadline_s``; completed rows still carry the solved arrays.
+
+    ``degradation`` is the retry-ladder trail, e.g.
+    ``("relax_tmax:1.5", "fallback:oma")`` — empty on the baseline path.
+    ``scheme`` is the scheme that produced the final arrays (``"oma"``
+    after a fallback).  ``latency_s`` is always submit→emit wall time,
+    including for rejected/shed rows (honest latency, ISSUE-9
+    satellite)."""
     rid: int
     n: int
     bucket: int
@@ -181,6 +269,9 @@ class AllocResult:
     latency_s: float           # submit → result available on host
     status: str = "ok"
     error: str = ""
+    priority: int = 0
+    deadline_s: float | None = None
+    degradation: tuple = ()
 
 
 @dataclass
@@ -193,6 +284,10 @@ class _Pending:
     d: np.ndarray              # [n] aligned with h2
     v_max: np.ndarray          # [n]
     t_submit: float
+    eff_cfg: GameConfig = None     # effective config (ladder may relax t_max)
+    eff_scheme: str = ""           # effective scheme (ladder may fall back)
+    stage: int = 0                 # retry-ladder stages consumed
+    degradation: tuple = ()
 
 
 @dataclass
@@ -203,20 +298,57 @@ class _InFlight:
     t_dispatch: float
 
 
+class _Breaker:
+    """Per-(bucket, scheme, inner, sic_mode) circuit breaker state."""
+    __slots__ = ("state", "fails", "opened_at")
+
+    def __init__(self):
+        self.state = "closed"       # closed | open | half_open
+        self.fails = 0              # consecutive bad batches
+        self.opened_at = 0.0        # monotonic time of the last open
+
+
 class AllocationService:
-    """Continuous-batching scheduler over the masked bucket executables.
+    """Continuous-batching scheduler over the masked bucket executables,
+    with the ISSUE-9 resilience layer (admission control, bounded-queue
+    shedding, degraded-retry, circuit breakers, watchdog).
 
     submit() enqueues (auto-flushing full batches), flush() force-packs
-    partial batches with dummy rows, drain() completes everything and
-    returns the accumulated ``AllocResult``s.  ``warmup()`` pre-compiles
-    the bucket set.  See the module docstring for the design.
+    partial batches with dummy rows, drain() completes everything —
+    including retry-ladder re-dispatches — and returns the accumulated
+    ``AllocResult``s sorted by rid.  ``warmup()`` pre-compiles the
+    bucket set.  ``health()`` snapshots the resilience state.  See the
+    module docstring for the design and the SLA contract.
+
+    ``max_queue=None`` (default) keeps the PR-8 blocking scheduler
+    bit-identically; setting it switches to the bounded-queue
+    non-blocking mode with priority shedding.  ``self._dispatch`` is the
+    dispatch seam — the chaos harness (``repro.launch.serve_chaos``)
+    wraps it to inject stalls, transient failures and poisoned outputs.
     """
 
     def __init__(self, buckets: Sequence[int] = DEFAULT_BUCKETS,
                  max_batch: int = 8, max_inflight: int = 2,
-                 max_iter: int = 20, tol: float = 1e-6):
+                 max_iter: int = 20, tol: float = 1e-6,
+                 max_queue: int | None = None,
+                 ewma_alpha: float = 0.25,
+                 degraded_retry: bool = True,
+                 retry_ladder: Sequence[str] = ("relax_tmax",
+                                                "fallback_oma"),
+                 relax_factor: float = 1.5,
+                 dispatch_retries: int = 2,
+                 backoff_base_s: float = 0.05,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 1.0,
+                 breaker_on_infeasible: bool = False,
+                 watchdog_s: float | None = 30.0,
+                 latency_window: int = 512):
         if not buckets or any(b <= 0 for b in buckets):
             raise ValueError(f"bad bucket widths {buckets}")
+        bad = [s for s in retry_ladder
+               if s not in ("relax_tmax", "fallback_oma")]
+        if bad:
+            raise ValueError(f"unknown retry-ladder stages {bad}")
         self.buckets = tuple(sorted(set(int(b) for b in buckets)))
         self.max_batch = int(max_batch)
         # multi-device: shard the batch axis of every bucket dispatch —
@@ -228,27 +360,60 @@ class AllocationService:
         self.max_inflight = int(max_inflight)
         self.max_iter = int(max_iter)
         self.tol = float(tol)
+        self.max_queue = None if max_queue is None else int(max_queue)
+        self.ewma_alpha = float(ewma_alpha)
+        self.degraded_retry = bool(degraded_retry)
+        self.retry_ladder = tuple(retry_ladder)
+        self.relax_factor = float(relax_factor)
+        self.dispatch_retries = int(dispatch_retries)
+        self.backoff_base_s = float(backoff_base_s)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        # infeasibility is a DATA property (a valid answer in the status
+        # vocabulary), not executable ill-health: all-infeasible batches
+        # feed the breaker only on request — e.g. a deployment whose
+        # stream is known-feasible and wants miscompiles caught.  On a
+        # mixed stream (the bench trace runs ~38% infeasible cells) the
+        # default would fast-fail healthy requests.
+        self.breaker_on_infeasible = bool(breaker_on_infeasible)
+        self.watchdog_s = None if watchdog_s is None else float(watchdog_s)
+        self.latency_window = int(latency_window)
         self._next_rid = 0
         self._pending: dict = collections.defaultdict(list)
         self._inflight: collections.deque = collections.deque()
         self._done: list = []
+        self._dispatch = _serve_batch_jit      # chaos-injection seam
+        self._ewma: dict = {}                  # key -> dispatch seconds
+        self._breakers: dict = {}              # key -> _Breaker
+        self.breaker_log: list = []            # (key_str, old, new) capped
+        self._lat: dict = collections.defaultdict(
+            lambda: collections.deque(maxlen=self.latency_window))
         self.stats = collections.Counter()
 
     # -- intake -------------------------------------------------------------
     def bucket_for(self, n: int) -> int:
+        """Smallest bucket width ≥ n; raises ValueError when n exceeds
+        the largest bucket (``submit`` catches this same error and turns
+        it into a structured rejection — single source of truth for the
+        oversize message)."""
         for b in self.buckets:
             if n <= b:
                 return b
         raise ValueError(f"request with {n} clients exceeds the largest "
                          f"bucket {self.buckets[-1]}; widen `buckets`")
 
-    def _reject(self, req: AllocRequest, n: int, why: str) -> int:
+    def _key_str(self, key: tuple) -> str:
+        nb, scheme, inner, sic_mode = key
+        return f"n{nb}/{scheme}/{inner}/{sic_mode}"
+
+    def _reject(self, req: AllocRequest, n: int, why: str, t0: float,
+                status: str = "rejected") -> int:
         """Graceful degradation: a request the service cannot dispatch
-        becomes a structured per-request error row (status="rejected",
-        NaN allocation) instead of an exception that kills the in-flight
-        stream.  Malformed LOCAL input (empty request, unknown scheme)
-        still raises from ``submit`` — those are caller bugs, not stream
-        conditions."""
+        becomes a structured per-request error row (NaN allocation) with
+        HONEST submit→reject latency instead of an exception that kills
+        the in-flight stream.  Malformed LOCAL input (empty request,
+        unknown scheme) still raises from ``submit`` — those are caller
+        bugs, not stream conditions."""
         rid = self._next_rid
         self._next_rid += 1
         nanv = np.full((max(n, 0),), np.nan, np.float32)
@@ -256,18 +421,50 @@ class AllocationService:
             rid=rid, n=n, bucket=0, scheme=req.scheme,
             p=nanv, q=nanv.copy(), f=nanv.copy(), alpha=nanv.copy(),
             rates=nanv.copy(), t_total=float("nan"), energy=float("nan"),
-            feasible=False, iterations=0, latency_s=0.0,
-            status="rejected", error=why))
-        self.stats["rejected"] += 1
+            feasible=False, iterations=0,
+            latency_s=time.perf_counter() - t0,
+            status=status, error=why, priority=req.priority,
+            deadline_s=req.deadline_s))
+        self.stats[status] += 1
         return rid
+
+    def _emit_structured(self, r: _Pending, status: str, error: str,
+                         bucket: int = 0) -> None:
+        """Exactly-once bookkeeping for a queued row that never reached a
+        healthy completion (shed / expired / dispatch failure)."""
+        nanv = np.full((max(r.n, 0),), np.nan, np.float32)
+        self._done.append(AllocResult(
+            rid=r.rid, n=r.n, bucket=bucket, scheme=r.eff_scheme,
+            p=nanv, q=nanv.copy(), f=nanv.copy(), alpha=nanv.copy(),
+            rates=nanv.copy(), t_total=float("nan"), energy=float("nan"),
+            feasible=False, iterations=0,
+            latency_s=time.perf_counter() - r.t_submit,
+            status=status, error=error, priority=r.req.priority,
+            deadline_s=r.req.deadline_s, degradation=r.degradation))
+        self.stats[status] += 1
+
+    def _predict_wait(self, key: tuple) -> float | None:
+        """Coarse queue-wait model for admission control: EWMA dispatch
+        seconds × (in-flight batches + this key's queued full batches +
+        the batch this request would join).  None (admit) until the
+        first measured completion seeds the EWMA."""
+        ew = self._ewma.get(key)
+        if ew is None:
+            return None
+        ahead = (len(self._inflight)
+                 + len(self._pending.get(key, ())) // self.max_batch + 1)
+        return ew * ahead
 
     def submit(self, req: AllocRequest) -> int:
         """Enqueue one request; returns its rid.  Flushes the bucket as
-        soon as it holds ``max_batch`` requests.
+        soon as it holds ``max_batch`` requests (PR-8 behavior); with
+        ``max_queue`` set, dispatch instead defers while the in-flight
+        window is full and the bounded queue sheds lowest-priority-first.
 
-        A request whose N exceeds the largest bucket is not dispatchable:
-        it completes immediately as a ``status="rejected"`` result (see
-        ``AllocResult``) rather than raising into the stream."""
+        Fast-fail paths (all structured rows, never raises mid-stream):
+        N exceeding the largest bucket, non-finite channel gains, an open
+        circuit breaker, and admission control on ``deadline_s``."""
+        t0 = time.perf_counter()
         if req.scheme not in SERVE_SCHEMES:
             raise ValueError(f"unknown scheme {req.scheme!r}; "
                              f"expected one of {SERVE_SCHEMES}")
@@ -275,30 +472,144 @@ class AllocationService:
         n = h2.shape[0]
         if n == 0:
             raise ValueError("empty request (0 clients)")
-        if n > self.buckets[-1]:
-            return self._reject(
-                req, n, f"request with {n} clients exceeds the largest "
-                        f"bucket {self.buckets[-1]}; widen `buckets`")
-        nb = self.bucket_for(n)
+        if not np.all(np.isfinite(h2)):
+            return self._reject(req, n, "non-finite channel gains in h2",
+                                t0)
+        try:
+            nb = self.bucket_for(n)     # single source of the oversize msg
+        except ValueError as e:
+            return self._reject(req, n, str(e), t0)
+        key = (nb, req.scheme, req.cfg.dinkelbach_inner, req.cfg.sic_mode)
+        br = self._breakers.get(key)
+        if br is not None and br.state == "open":
+            if time.monotonic() - br.opened_at >= self.breaker_cooldown_s:
+                self._breaker_transition(key, br, "half_open")
+            else:
+                self.stats["breaker_rejected"] += 1
+                return self._reject(
+                    req, n, f"circuit breaker open for "
+                            f"{self._key_str(key)} "
+                            f"({br.fails} consecutive bad batches)", t0)
+        if req.deadline_s is not None:
+            wait = self._predict_wait(key)
+            if wait is not None and wait > req.deadline_s:
+                self.stats["admission_rejected"] += 1
+                return self._reject(
+                    req, n, f"admission control: predicted queue wait "
+                            f"{wait:.4f}s exceeds deadline "
+                            f"{req.deadline_s:.4f}s", t0)
         order = np.argsort(-h2, kind="stable")      # SIC decode order
         d = np.broadcast_to(np.asarray(req.d, np.float32), (n,))[order]
         vm = np.broadcast_to(np.asarray(req.v_max, np.float32), (n,))[order]
         rid = self._next_rid
         self._next_rid += 1
-        key = (nb, req.scheme, req.cfg.dinkelbach_inner, req.cfg.sic_mode)
         self._pending[key].append(_Pending(
             rid=rid, req=req, n=n, order=order, h2=h2[order], d=d, v_max=vm,
-            t_submit=time.perf_counter()))
+            t_submit=t0, eff_cfg=req.cfg, eff_scheme=req.scheme))
         self.stats["submitted"] += 1
-        if len(self._pending[key]) >= self.max_batch:
-            self._flush_key(key)
+        if self.max_queue is None:
+            if len(self._pending[key]) >= self.max_batch:
+                self._flush_key(key)               # PR-8 blocking path
+        else:
+            self._shed_over_bound()
+            self._pump()
         return rid
 
+    # -- bounded queue / shedding ------------------------------------------
+    def _shed_over_bound(self) -> None:
+        """Priority-ordered load shedding: while the pending total
+        exceeds ``max_queue``, the LOWEST-priority, YOUNGEST (largest
+        rid) queued request becomes a structured ``status="shed"`` row —
+        older same-priority requests are closer to dispatch and survive."""
+        while (sum(len(v) for v in self._pending.values())
+               > self.max_queue):
+            victim_key, victim_i = None, None
+            victim_rank = None
+            for key, rows in self._pending.items():
+                for i, r in enumerate(rows):
+                    if r.rid < 0:
+                        continue                   # warmup probes exempt
+                    rank = (r.req.priority, -r.rid)
+                    if victim_rank is None or rank < victim_rank:
+                        victim_rank, victim_key, victim_i = rank, key, i
+            if victim_key is None:
+                return
+            r = self._pending[victim_key].pop(victim_i)
+            if not self._pending[victim_key]:
+                del self._pending[victim_key]
+            self._emit_structured(
+                r, "shed", f"bounded queue full (max_queue="
+                           f"{self.max_queue}): shed priority "
+                           f"{r.req.priority}", bucket=victim_key[0])
+
+    def _reap_ready(self) -> None:
+        """Opportunistically retire in-flight batches whose results are
+        already on host (non-blocking ``is_ready`` poll) — the bounded-
+        queue mode's replacement for the PR-8 blocking completion."""
+        while self._inflight:
+            head = self._inflight[0]
+            try:
+                if not head.out.energy.is_ready():
+                    break
+            except AttributeError:     # no is_ready on this array type
+                break
+            self._complete(self._inflight.popleft())
+
+    def _pump(self) -> None:
+        """Bounded-queue dispatch policy: reap ready batches, then
+        dispatch full highest-priority chunks while the in-flight window
+        has room.  Never blocks the producer — overflow is handled by
+        ``_shed_over_bound``, partial batches wait for ``flush``."""
+        self._reap_ready()
+        progressed = True
+        while progressed and len(self._inflight) <= self.max_inflight:
+            progressed = False
+            keys = sorted(
+                self._pending,
+                key=lambda k: -max((r.req.priority
+                                    for r in self._pending[k]), default=0))
+            for key in keys:
+                if len(self._pending.get(key, ())) < self.max_batch:
+                    continue
+                chunk = self._take_chunk(key)
+                if chunk:
+                    self._dispatch_chunk(key, chunk)
+                    progressed = True
+                if len(self._inflight) > self.max_inflight:
+                    return
+
     # -- dispatch -----------------------------------------------------------
-    def _flush_key(self, key: tuple) -> None:
+    def _take_chunk(self, key: tuple) -> list:
+        """Pop up to ``max_batch`` rows from this key's queue, highest
+        priority first (stable — FIFO within a priority level, so the
+        all-default stream packs exactly like PR 8).  Rows whose deadline
+        already expired while queued emit ``status="timeout"`` without
+        wasting a batch lane."""
         rows = self._pending.pop(key, [])
-        if not rows:
-            return
+        now = time.perf_counter()
+        live = []
+        for r in rows:
+            if (r.rid >= 0 and r.req.deadline_s is not None
+                    and now - r.t_submit > r.req.deadline_s):
+                self.stats["expired_in_queue"] += 1
+                self._emit_structured(
+                    r, "timeout", f"deadline {r.req.deadline_s:.4f}s "
+                                  f"expired while queued", bucket=key[0])
+            else:
+                live.append(r)
+        if not live:
+            return []
+        live.sort(key=lambda r: (-r.req.priority, r.rid))
+        chunk, rest = live[:self.max_batch], live[self.max_batch:]
+        if rest:
+            self._pending[key] = rest + self._pending.pop(key, [])
+        return chunk
+
+    def _dispatch_chunk(self, key: tuple, rows: list) -> None:
+        """Pack one padded batch and dispatch it, retrying transient
+        dispatch failures with exponential backoff; a dispatch that
+        still fails turns every request in the chunk into a structured
+        ``"rejected"`` row and feeds the circuit breaker."""
         nb, scheme, inner, sic_mode = key
         b = self.batch_width                    # fixed batch width per
         n_real = len(rows)                      # executable (zero retraces)
@@ -314,44 +625,193 @@ class AllocationService:
             mask[i, :r.n] = True
             eps[i] = r.req.epsilon
         # dummy rows reuse the first request's physics (masked out anyway)
-        cfgs = [r.req.cfg for r in rows] + [rows[0].req.cfg] * (b - n_real)
+        cfgs = [r.eff_cfg for r in rows] + [rows[0].eff_cfg] * (b - n_real)
         phys = stack_physics(cfgs)
         keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(
             [r.req.seed for r in rows] + [0] * (b - n_real), jnp.uint32))
-        out = _serve_batch_jit(phys, keys, h2, D, vm, eps, mask,
-                               jnp.asarray(self.tol, jnp.float32),
-                               scheme=scheme, max_iter=self.max_iter,
-                               inner=inner, sic_mode=sic_mode,
-                               shards=self.shards)
+        last_err = None
+        for attempt in range(self.dispatch_retries + 1):
+            if attempt:
+                self.stats["dispatch_retries"] += 1
+                time.sleep(self.backoff_base_s * (2 ** (attempt - 1)))
+            try:
+                out = self._dispatch(phys, keys, h2, D, vm, eps, mask,
+                                     jnp.asarray(self.tol, jnp.float32),
+                                     scheme=scheme, max_iter=self.max_iter,
+                                     inner=inner, sic_mode=sic_mode,
+                                     shards=self.shards)
+                break
+            except Exception as e:              # noqa: BLE001 — seam errors
+                last_err = e
+        else:
+            self.stats["dispatch_failures"] += 1
+            self._breaker_record(key, bad=True)
+            for r in rows:
+                if r.rid >= 0:
+                    self._emit_structured(
+                        r, "rejected",
+                        f"dispatch failed after "
+                        f"{self.dispatch_retries + 1} attempts: "
+                        f"{last_err}", bucket=nb)
+            return
         self._inflight.append(_InFlight(key=key, pending=rows, out=out,
                                         t_dispatch=time.perf_counter()))
         self.stats["dispatches"] += 1
         self.stats["padded_slots"] += b - n_real
-        while len(self._inflight) > self.max_inflight:
-            self._complete(self._inflight.popleft())
+
+    def _flush_key(self, key: tuple) -> None:
+        while True:
+            chunk = self._take_chunk(key)
+            if not chunk:
+                return
+            self._dispatch_chunk(key, chunk)
+            while len(self._inflight) > self.max_inflight:
+                self._complete(self._inflight.popleft())
 
     def flush(self) -> None:
         """Dispatch every partial batch (dummy-padded to the fixed width)."""
-        for key in sorted(self._pending.keys()):
+        for key in sorted(list(self._pending.keys())):
             self._flush_key(key)
+
+    # -- circuit breaker ----------------------------------------------------
+    def _breaker_transition(self, key: tuple, br: _Breaker,
+                            state: str) -> None:
+        self.breaker_log.append((self._key_str(key), br.state, state))
+        del self.breaker_log[:-256]            # bounded transition history
+        self.stats[f"breaker_{state}"] += 1
+        br.state = state
+        if state == "open":
+            br.opened_at = time.monotonic()
+        elif state == "closed":
+            br.fails = 0
+
+    def _breaker_record(self, key: tuple, bad: bool) -> None:
+        """Feed one batch-health observation: ``breaker_threshold``
+        consecutive bad batches (or one bad half-open probe) open the
+        breaker; a healthy half-open probe closes it."""
+        br = self._breakers.setdefault(key, _Breaker())
+        if bad:
+            br.fails += 1
+            if br.state == "half_open" or (
+                    br.state == "closed"
+                    and br.fails >= self.breaker_threshold):
+                self._breaker_transition(key, br, "open")
+        else:
+            if br.state == "half_open":
+                self._breaker_transition(key, br, "closed")
+            elif br.state == "closed":
+                br.fails = 0
+
+    # -- degraded retry -----------------------------------------------------
+    def _ladder_next(self, r: _Pending):
+        """Next applicable retry-ladder stage for an infeasible row, or
+        None when exhausted.  ``relax_tmax`` applies to every
+        deterministic scheme; ``fallback_oma`` only to the Stackelberg
+        family (falling back from oma to oma is a no-op, and the random
+        baseline earns no retries)."""
+        i = r.stage
+        while i < len(self.retry_ladder):
+            s = self.retry_ladder[i]
+            if s == "relax_tmax" and r.eff_scheme != "random":
+                return i, s
+            if s == "fallback_oma" and r.eff_scheme in ("proposed", "ideal",
+                                                        "wo_dt"):
+                return i, s
+            i += 1
+        return None
+
+    def _requeue_retry(self, r: _Pending, nxt) -> None:
+        i, stage = nxt
+        if stage == "relax_tmax":
+            cfg2 = dataclasses.replace(
+                r.eff_cfg, t_max=r.eff_cfg.t_max * self.relax_factor)
+            scheme2 = r.eff_scheme
+            tag = f"relax_tmax:{self.relax_factor:g}"
+        else:
+            cfg2, scheme2, tag = r.eff_cfg, "oma", "fallback:oma"
+        r2 = dataclasses.replace(r, eff_cfg=cfg2, eff_scheme=scheme2,
+                                 stage=i + 1,
+                                 degradation=r.degradation + (tag,))
+        nb = self.bucket_for(r.n)
+        self._pending[(nb, scheme2, cfg2.dinkelbach_inner,
+                       cfg2.sic_mode)].append(r2)
+        self.stats["retries"] += 1
 
     # -- completion ---------------------------------------------------------
     def _complete(self, inf: _InFlight) -> None:
-        out = jax.block_until_ready(inf.out)
-        nb = inf.key[0]
+        key = inf.key
+        nb = key[0]
+        try:
+            out = jax.block_until_ready(inf.out)
+        except Exception as e:         # device-side failure surfaces here
+            self.stats["dispatch_failures"] += 1
+            self._breaker_record(key, bad=True)
+            for r in inf.pending:
+                if r.rid >= 0:
+                    self._emit_structured(
+                        r, "rejected", f"batch execution failed: {e}",
+                        bucket=nb)
+            return
+        dt = time.perf_counter() - inf.t_dispatch
+        real = [i for i, r in enumerate(inf.pending) if r.rid >= 0]
+        if real:
+            # EWMA of measured dispatch latency feeds admission control;
+            # warmup probes (compile-dominated, no real rows) don't seed it
+            prev = self._ewma.get(key)
+            self._ewma[key] = dt if prev is None else (
+                self.ewma_alpha * dt + (1.0 - self.ewma_alpha) * prev)
+        watchdog_trip = (self.watchdog_s is not None
+                         and dt > self.watchdog_s)
+        if watchdog_trip:
+            self.stats["watchdog_trips"] += 1
         host = {f: np.asarray(getattr(out, f))
                 for f in ("p", "q", "f", "alpha", "rates", "t_total",
                           "energy", "feasible", "iterations")}
+        if real:
+            idx = np.asarray(real)
+            finite = all(np.all(np.isfinite(host[f][idx]))
+                         for f in ("p", "t_total", "energy"))
+            all_infeasible = not bool(np.any(host["feasible"][idx]))
+            self._breaker_record(
+                key, bad=((not finite) or watchdog_trip
+                          or (self.breaker_on_infeasible
+                              and all_infeasible)))
         now = time.perf_counter()
         for i, r in enumerate(inf.pending):
             if r.rid < 0:              # warmup probe row — not a user request
                 continue
+            row_finite = (np.all(np.isfinite(host["p"][i, :r.n]))
+                          and np.isfinite(host["t_total"][i])
+                          and np.isfinite(host["energy"][i]))
+            feasible = bool(host["feasible"][i])
+            if not row_finite:
+                self._emit_structured(
+                    r, "rejected", "non-finite allocation from solver",
+                    bucket=nb)
+                continue
+            if (not feasible and self.degraded_retry
+                    and r.req.allow_degraded):
+                nxt = self._ladder_next(r)
+                if nxt is not None:    # re-dispatch, don't emit yet
+                    self._requeue_retry(r, nxt)
+                    continue
             inv = np.empty_like(r.order)
             inv[r.order] = np.arange(r.n)        # SIC order → request order
             unsort = lambda a: np.ascontiguousarray(a[i, :r.n][inv])
-            feasible = bool(host["feasible"][i])
+            latency = now - r.t_submit
+            late = (r.req.deadline_s is not None
+                    and latency > r.req.deadline_s)
+            if not feasible:
+                status, error = "infeasible", \
+                    "equilibrium violates the deadline/resource box"
+            elif late:
+                status = "timeout"
+                error = (f"completed {latency:.4f}s after submit > "
+                         f"deadline {r.req.deadline_s:.4f}s")
+            else:
+                status, error = "ok", ""
             self._done.append(AllocResult(
-                rid=r.rid, n=r.n, bucket=nb, scheme=r.req.scheme,
+                rid=r.rid, n=r.n, bucket=nb, scheme=r.eff_scheme,
                 p=unsort(host["p"]), q=unsort(host["q"]),
                 f=unsort(host["f"]), alpha=unsort(host["alpha"]),
                 rates=unsort(host["rates"]),
@@ -359,30 +819,66 @@ class AllocationService:
                 energy=float(host["energy"][i]),
                 feasible=feasible,
                 iterations=int(host["iterations"][i]),
-                latency_s=now - r.t_submit,
-                status="ok" if feasible else "infeasible",
-                error="" if feasible else
-                      "equilibrium violates the deadline/resource box"))
+                latency_s=latency,
+                status=status, error=error, priority=r.req.priority,
+                deadline_s=r.req.deadline_s, degradation=r.degradation))
             self.stats["completed"] += 1
+            self._lat[r.req.priority].append(latency)
             if not feasible:
                 self.stats["infeasible"] += 1
+            elif late:
+                self.stats["timeout"] += 1
+            elif r.degradation:
+                self.stats["degraded_ok"] += 1
 
     def drain(self) -> list:
-        """Flush all partial batches, retire all in-flight dispatches, and
-        return every accumulated result (submit order not guaranteed —
-        order by ``rid`` for a stable view)."""
-        self.flush()
-        while self._inflight:
-            self._complete(self._inflight.popleft())
+        """Flush all partial batches, retire all in-flight dispatches
+        (looping until retry-ladder re-dispatches settle too), and
+        return every accumulated result SORTED BY RID — one row per
+        submitted rid, exactly once."""
+        while self._pending or self._inflight:
+            self.flush()
+            while self._inflight:
+                self._complete(self._inflight.popleft())
         done, self._done = self._done, []
+        done.sort(key=lambda r: r.rid)
         return done
+
+    # -- observability ------------------------------------------------------
+    def health(self) -> dict:
+        """Resilience snapshot: queue depths, breaker states, EWMA
+        dispatch latencies, every counter, and per-priority p50/p99
+        latency over the last ``latency_window`` completions."""
+        lat = {}
+        for pri in sorted(self._lat):
+            arr = np.asarray(self._lat[pri], np.float64) * 1e3
+            if arr.size:
+                lat[str(pri)] = {
+                    "n": int(arr.size),
+                    "p50_ms": float(np.percentile(arr, 50)),
+                    "p99_ms": float(np.percentile(arr, 99))}
+        return {
+            "queued": {self._key_str(k): len(v)
+                       for k, v in self._pending.items() if v},
+            "queued_total": sum(len(v) for v in self._pending.values()),
+            "inflight": len(self._inflight),
+            "breakers": {self._key_str(k): {"state": b.state,
+                                            "fails": b.fails}
+                         for k, b in self._breakers.items()},
+            "breaker_transitions": list(self.breaker_log),
+            "ewma_dispatch_s": {self._key_str(k): round(v, 6)
+                                for k, v in self._ewma.items()},
+            "counters": {k: int(v) for k, v in sorted(self.stats.items())},
+            "latency_by_priority_ms": lat,
+        }
 
     # -- pre-compilation ----------------------------------------------------
     def warmup(self, schemes: Sequence[str] = ("proposed",),
                cfg: GameConfig | None = None) -> float:
         """Compile every (bucket, scheme) executable with an all-dummy
         batch; returns the wall seconds spent (the cold-start tax a warm
-        deployment never pays on the stream)."""
+        deployment never pays on the stream).  Probe rows (rid=-1) never
+        surface in ``drain()``, ``stats["completed"]`` or the EWMA."""
         cfg = cfg or GameConfig()
         t0 = time.perf_counter()
         for scheme in schemes:
@@ -395,7 +891,8 @@ class AllocationService:
                                h2=np.ones(1, np.float32),
                                d=np.zeros(1, np.float32),
                                v_max=np.zeros(1, np.float32),
-                               t_submit=time.perf_counter())
+                               t_submit=time.perf_counter(),
+                               eff_cfg=cfg, eff_scheme=scheme)
                 self._pending[key] = [row]
                 self._flush_key(key)
         while self._inflight:

@@ -1,0 +1,250 @@
+"""Service-level chaos harness for the allocation service (ISSUE 9).
+
+PR 7 gave the *training* layer a fault-injection scenario library
+(``repro.core.faults``: declarative configs, named presets, trace-safe
+knobs).  This module is the matching story for the *serving* layer:
+``ChaosScenario`` declares a reproducible storm — burst overload,
+NaN/Inf channel rows, artificial dispatch stalls, transient dispatch
+failures, poisoned (all-NaN) solver outputs, malformed requests — and
+``run_chaos`` drives it through a live ``AllocationService``, then
+audits the wreckage against the service's graceful-degradation
+contract:
+
+  * **exactly-once** — every submitted rid appears in ``drain()``
+    exactly once, with a status from ``STATUS_VOCAB``; the stream never
+    dies (no exception escapes the service for any injected condition).
+  * **graceful priority degradation** — under overload, HIGH-priority
+    requests keep completing (bounded p99) while LOW-priority requests
+    shed; shedding is always structured, never silent.
+  * **containment** — poisoned outputs trip the per-(bucket, scheme)
+    circuit breaker instead of propagating NaN allocations as ``"ok"``.
+
+Faults inject at the service's dispatch seam (``service._dispatch``),
+keyed on the DISPATCH ORDINAL — deterministic given the scenario, no
+wall-clock or RNG in the injection decision, so a chaos run is
+replayable.  ``chaos_dispatch`` wraps the real executable:
+
+  * ``stall_dispatches``  — sleep ``stall_s`` before dispatching (an
+    artificially slow executable; exercises the watchdog and the
+    bounded-queue backpressure).
+  * ``fail_dispatches``   — raise ``ChaosDispatchError`` (a transient
+    infrastructure failure; exercises backoff retry).  Each ATTEMPT
+    consumes one ordinal, so a single listed ordinal fails once and the
+    backoff retry succeeds; list a consecutive run of ordinals to
+    exhaust the whole retry budget.
+  * ``poison_dispatches`` — run the real solve, then replace every
+    floating-point leaf with NaN (a numerically-poisoned executable;
+    exercises non-finite containment + the breaker).
+
+Used by ``tests/test_serve_chaos.py`` (tier-1, marker ``chaos``),
+``benchmarks/serve_latency.py`` (the ``chaos`` section of
+``BENCH_serve.json``) and ``scripts/dev_smoke.py``.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .alloc_serve import STATUS_VOCAB, AllocationService, AllocRequest
+
+
+class ChaosDispatchError(RuntimeError):
+    """Injected transient dispatch failure (infrastructure, not input)."""
+
+
+@dataclass(frozen=True)
+class ChaosScenario:
+    """One reproducible serving storm.  All stream randomness derives
+    from ``seed``; all fault injection keys on the dispatch ordinal."""
+    name: str
+    n_requests: int = 60
+    seed: int = 0
+    n_lo: int = 1                       # client-count range of the stream
+    n_hi: int = 8
+    hi_priority_frac: float = 0.25      # fraction submitted at priority 2
+    hi_deadline_s: float | None = None  # deadline attached to hi-priority
+    nan_request_frac: float = 0.0       # fraction with NaN/Inf channel rows
+    malformed_every: int = 0            # every k-th request is malformed
+    #                                     (empty h2 — submit() raises; the
+    #                                     harness catches and counts it)
+    stall_dispatches: tuple = ()        # dispatch ordinals to stall
+    stall_s: float = 0.25
+    fail_dispatches: tuple = ()         # ordinals raising ChaosDispatchError
+    poison_dispatches: tuple = ()       # ordinals with all-NaN outputs
+    service_kwargs: dict = field(default_factory=dict)
+
+
+#: Named presets, PR-7 style: small, deterministic, each stressing one
+#: containment mechanism; ``full_chaos`` composes all of them.
+SCENARIOS = {
+    "burst_overload": ChaosScenario(
+        name="burst_overload", n_requests=80, hi_priority_frac=0.25,
+        service_kwargs={"max_queue": 16, "max_batch": 4,
+                        "buckets": (8,)}),
+    "nan_storm": ChaosScenario(
+        name="nan_storm", n_requests=40, nan_request_frac=0.3,
+        service_kwargs={"max_batch": 4, "buckets": (8,)}),
+    "stalled_dispatch": ChaosScenario(
+        name="stalled_dispatch", n_requests=30, stall_dispatches=(1,),
+        stall_s=0.25,
+        service_kwargs={"max_batch": 4, "buckets": (8,)}),
+    "full_chaos": ChaosScenario(
+        name="full_chaos", n_requests=80, hi_priority_frac=0.25,
+        nan_request_frac=0.15, malformed_every=17,
+        stall_dispatches=(2,), stall_s=0.2, fail_dispatches=(4,),
+        poison_dispatches=(6,),
+        service_kwargs={"max_queue": 24, "max_batch": 4,
+                        "buckets": (8,), "backoff_base_s": 0.01}),
+}
+
+
+def chaos_dispatch(real_dispatch, scenario: ChaosScenario, counters: dict):
+    """Wrap the service's dispatch seam with ordinal-keyed injection.
+
+    ``counters`` (mutated in place) tallies ``dispatch_calls`` (every
+    attempt, including retries of a failed ordinal) plus one counter
+    per injected fault kind."""
+
+    def wrapped(*args, **kwargs):
+        ordinal = counters["dispatch_calls"]
+        counters["dispatch_calls"] += 1
+        if ordinal in scenario.stall_dispatches:
+            counters["injected_stalls"] += 1
+            time.sleep(scenario.stall_s)
+        if ordinal in scenario.fail_dispatches:
+            counters["injected_failures"] += 1
+            raise ChaosDispatchError(
+                f"injected transient failure at dispatch #{ordinal}")
+        out = real_dispatch(*args, **kwargs)
+        if ordinal in scenario.poison_dispatches:
+            counters["injected_poison"] += 1
+            out = jax.tree_util.tree_map(
+                lambda x: jnp.full_like(x, jnp.nan)
+                if jnp.issubdtype(x.dtype, jnp.floating) else x, out)
+        return out
+
+    return wrapped
+
+
+def make_chaos_stream(scenario: ChaosScenario):
+    """The deterministic request stream: (AllocRequest, expected_raise)
+    pairs.  ``expected_raise`` marks malformed requests that ``submit``
+    is CONTRACTED to raise on (caller bugs, outside exactly-once)."""
+    rng = np.random.default_rng(scenario.seed)
+    stream = []
+    for i in range(scenario.n_requests):
+        n = int(rng.integers(scenario.n_lo, scenario.n_hi + 1))
+        h2 = rng.uniform(0.05, 2.0, n).astype(np.float32)
+        malformed = (scenario.malformed_every > 0
+                     and i % scenario.malformed_every
+                     == scenario.malformed_every - 1)
+        if malformed:
+            h2 = np.zeros((0,), np.float32)
+        elif rng.uniform() < scenario.nan_request_frac:
+            h2[int(rng.integers(0, n))] = (
+                np.nan if rng.uniform() < 0.5 else np.inf)
+        hi = rng.uniform() < scenario.hi_priority_frac
+        stream.append((AllocRequest(
+            h2=h2, priority=2 if hi else 0,
+            deadline_s=scenario.hi_deadline_s if hi else None,
+            seed=i), malformed))
+    return stream
+
+
+@dataclass
+class ChaosReport:
+    """Audited outcome of one chaos run."""
+    scenario: str
+    submitted: int                     # rids handed out by submit()
+    malformed_raised: int              # submit() raised (by contract)
+    results: list                      # drained AllocResults, rid-sorted
+    status_counts: dict
+    lost_rids: list                    # submitted but never drained
+    duplicate_rids: list               # drained more than once
+    invalid_status: list               # statuses outside STATUS_VOCAB
+    nan_leaked_ok: int                 # status=="ok" rows w/ non-finite p
+    hi_latency_ms: list                # completed hi-priority latencies
+    injection: dict                    # chaos_dispatch counters
+    health: dict                       # service.health() at the end
+
+    @property
+    def exactly_once(self) -> bool:
+        return not (self.lost_rids or self.duplicate_rids
+                    or self.invalid_status)
+
+    def hi_p99_ms(self) -> float:
+        if not self.hi_latency_ms:
+            return float("nan")
+        return float(np.percentile(np.asarray(self.hi_latency_ms), 99))
+
+
+def run_chaos(scenario: ChaosScenario,
+              service: AllocationService | None = None,
+              warm: bool = True) -> ChaosReport:
+    """Drive one scenario through a live service and audit the result.
+
+    The service is real (actual bucket executables, actual scheduler);
+    only the dispatch seam is wrapped.  ``warm=True`` pre-compiles the
+    buckets BEFORE arming the chaos wrapper, so injected ordinals land
+    on steady-state dispatches, not compiles."""
+    if service is None:
+        service = AllocationService(**dict(scenario.service_kwargs))
+    if warm:
+        service.warmup(schemes=("proposed",))
+    counters = {"dispatch_calls": 0, "injected_stalls": 0,
+                "injected_failures": 0, "injected_poison": 0}
+    service._dispatch = chaos_dispatch(service._dispatch, scenario,
+                                       counters)
+    submitted_rids, malformed_raised = [], 0
+    for req, malformed in make_chaos_stream(scenario):
+        try:
+            submitted_rids.append(service.submit(req))
+        except ValueError:
+            if not malformed:
+                raise           # stream died on a well-formed request
+            malformed_raised += 1
+    results = service.drain()
+
+    seen = [r.rid for r in results]
+    counts: dict = {}
+    for r in results:
+        counts[r.status] = counts.get(r.status, 0) + 1
+    sub = set(submitted_rids)
+    return ChaosReport(
+        scenario=scenario.name,
+        submitted=len(submitted_rids),
+        malformed_raised=malformed_raised,
+        results=results,
+        status_counts=counts,
+        lost_rids=sorted(sub - set(seen)),
+        duplicate_rids=sorted(rid for rid in set(seen)
+                              if seen.count(rid) > 1),
+        invalid_status=sorted({r.status for r in results}
+                              - set(STATUS_VOCAB)),
+        nan_leaked_ok=sum(1 for r in results if r.status == "ok"
+                          and not np.all(np.isfinite(r.p))),
+        hi_latency_ms=[r.latency_s * 1e3 for r in results
+                       if r.priority >= 2
+                       and r.status in ("ok", "infeasible", "timeout")],
+        injection=dict(counters),
+        health=service.health())
+
+
+def assert_exactly_once(report: ChaosReport) -> None:
+    """Raise AssertionError unless the run honored the contract."""
+    assert not report.lost_rids, (
+        f"{report.scenario}: LOST rids {report.lost_rids[:10]} "
+        f"({len(report.lost_rids)} total) — exactly-once violated")
+    assert not report.duplicate_rids, (
+        f"{report.scenario}: DUPLICATE rids {report.duplicate_rids[:10]}")
+    assert not report.invalid_status, (
+        f"{report.scenario}: statuses outside {STATUS_VOCAB}: "
+        f"{report.invalid_status}")
+    assert report.nan_leaked_ok == 0, (
+        f"{report.scenario}: {report.nan_leaked_ok} status='ok' rows "
+        f"carry non-finite allocations")

@@ -195,6 +195,78 @@ def test_true_claims_pass(fake_repo):
 
 
 # ---------------------------------------------------------------------------
+# ISSUE-9: the serve resilience sections (overload / chaos)
+# ---------------------------------------------------------------------------
+def _resilience_doc(ov_rps=100.0, ch_rps=50.0, **claims):
+    base = {"overload_no_lost_requests": True,
+            "overload_hi_priority_p99_bounded": True,
+            "chaos_no_lost_requests": True,
+            "chaos_no_nan_leak": True}
+    base.update(claims)
+    return {"requests_per_sec": 100.0,
+            "overload": {"requests_per_sec": ov_rps},
+            "chaos": {"requests_per_sec": ch_rps},
+            "claims": base}
+
+
+def test_serve_resilience_sections_gated(fake_repo, capsys):
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _resilience_doc()
+    _write(root, "BENCH_serve.json", json.dumps(_resilience_doc()))
+    assert check_bench.check() == 0
+    out = capsys.readouterr().out
+    assert "overload_rps" in out and "chaos_rps" in out
+    # a collapsed overload rate regresses like any gated metric
+    _write(root, "BENCH_serve.json", json.dumps(_resilience_doc(ov_rps=40)))
+    assert check_bench.check(verbose=False) == 1
+
+
+def test_serve_lost_request_claim_fails_gate(fake_repo, capsys):
+    """The exactly-once headline is a hard gate: a chaos run that lost a
+    request fails even with healthy throughput."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _resilience_doc()
+    _write(root, "BENCH_serve.json",
+           json.dumps(_resilience_doc(chaos_no_lost_requests=False)))
+    assert check_bench.check() == 1
+    assert "claim:chaos_no_lost_requests" in capsys.readouterr().out
+
+
+def test_serve_hi_priority_p99_claim_fails_gate(fake_repo):
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _resilience_doc()
+    _write(root, "BENCH_serve.json", json.dumps(
+        _resilience_doc(overload_hi_priority_p99_bounded=False)))
+    assert check_bench.check(verbose=False) == 1
+
+
+def test_serve_lost_resilience_section_fails(fake_repo, capsys):
+    """Once the baseline carries overload/chaos sections, a bench that
+    stops reporting them must fail (section-presence via the gated rate)."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _resilience_doc()
+    _write(root, "BENCH_serve.json",
+           json.dumps({"requests_per_sec": 100.0,
+                       "claims": {"chaos_no_lost_requests": True}}))
+    assert check_bench.check() == 1
+    out = capsys.readouterr().out
+    assert "overload_rps" in out and "MISSING" in out
+
+
+def test_serve_resilience_tolerances_apply(fake_repo):
+    """The ±35% declared window: a 30% drop on overload_rps passes with
+    the override, fails without."""
+    root, baselines = fake_repo
+    baselines["BENCH_serve.json"] = _resilience_doc(ov_rps=100.0)
+    doc = _resilience_doc(ov_rps=70.0)
+    doc["tolerances"] = {"overload_rps": 0.35}
+    _write(root, "BENCH_serve.json", json.dumps(doc))
+    assert check_bench.check(verbose=False) == 0
+    _write(root, "BENCH_serve.json", json.dumps(_resilience_doc(ov_rps=70)))
+    assert check_bench.check(verbose=False) == 1
+
+
+# ---------------------------------------------------------------------------
 # ISSUE-8: the multi-device scaling gate
 # ---------------------------------------------------------------------------
 def _scaling_doc(eff_vmap=0.9, eff_sweep=0.9, parity=1e-7, noise=0.10,

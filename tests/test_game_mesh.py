@@ -173,7 +173,9 @@ for _ in range(12):
 def run_stream(shards_env):
     os.environ["REPRO_MESH_DEVICES"] = shards_env
     svc = AllocationService(buckets=(8, 16), max_batch=4, max_inflight=2)
-    svc.warmup(schemes=("proposed",))
+    # warm the oma fallback too: infeasible cells walk the degraded-retry
+    # ladder onto it, and a warmed pair keeps the stream retrace-free
+    svc.warmup(schemes=("proposed", "oma"))
     before = TRACE_COUNTS["serve_allocation"]
     for h2, t_max in trace:
         svc.submit(AllocRequest(h2=h2, d=200.0, v_max=0.5,

@@ -1,0 +1,97 @@
+"""Service-level chaos suite (marker: chaos — CI runs it as its own
+job).  Drives `repro.launch.serve_chaos` scenarios through a live
+AllocationService and asserts the graceful-degradation contract: the
+exactly-once invariant under every storm, structured shedding that
+spares high priority, and breaker trip→recovery mid-stream."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.launch.alloc_serve import AllocationService, AllocRequest
+from repro.launch.serve_chaos import (SCENARIOS, ChaosScenario,
+                                      assert_exactly_once, run_chaos)
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_preset_scenarios_exactly_once(name):
+    report = run_chaos(SCENARIOS[name])
+    assert_exactly_once(report)
+    assert report.submitted + report.malformed_raised == \
+        SCENARIOS[name].n_requests
+    assert len(report.results) == report.submitted
+
+
+def test_full_chaos_injections_fired_and_contained():
+    report = run_chaos(SCENARIOS["full_chaos"])
+    assert_exactly_once(report)
+    inj = report.injection
+    assert inj["injected_stalls"] == 1
+    assert inj["injected_failures"] == 1
+    assert inj["injected_poison"] == 1
+    assert report.malformed_raised > 0           # malformed rows raised ...
+    assert report.status_counts.get("ok", 0) > 0  # ... and the stream lived
+    # NaN-channel requests were rejected structurally, not solved
+    assert report.status_counts.get("rejected", 0) > 0
+    assert report.health["counters"]["dispatch_retries"] >= 1
+
+
+def test_overload_sheds_low_priority_only():
+    # one bucket key, max_batch larger than the stream's burst so nothing
+    # dispatches until drain: the bounded queue must shed — and with
+    # fewer high-priority requests than queue slots, ONLY low priority
+    scenario = ChaosScenario(
+        name="shed_burst", n_requests=40, seed=5, hi_priority_frac=0.15,
+        service_kwargs={"max_queue": 8, "max_batch": 16, "buckets": (8,)})
+    report = run_chaos(scenario)
+    assert_exactly_once(report)
+    shed = [r for r in report.results if r.status == "shed"]
+    hi = [r for r in report.results if r.priority == 2]
+    assert len(shed) > 0                         # overload really shed
+    assert {r.priority for r in shed} == {0}     # never a hi-priority row
+    assert hi and all(r.status == "ok" for r in hi)
+    assert report.health["counters"]["shed"] == len(shed)
+
+
+def test_stall_does_not_lose_requests():
+    report = run_chaos(SCENARIOS["stalled_dispatch"])
+    assert_exactly_once(report)
+    assert report.injection["injected_stalls"] == 1
+    assert report.status_counts == {"ok": report.submitted}
+
+
+def test_breaker_trips_and_recovers_mid_chaos():
+    scenario = ChaosScenario(
+        name="poison_run", n_requests=24, seed=9,
+        poison_dispatches=(0, 1, 2),
+        service_kwargs={"max_batch": 4, "buckets": (8,),
+                        "breaker_threshold": 3,
+                        "breaker_cooldown_s": 0.05})
+    svc = AllocationService(**dict(scenario.service_kwargs))
+    report = run_chaos(scenario, service=svc)
+    assert_exactly_once(report)
+    c = report.health["counters"]
+    assert c["breaker_open"] >= 1                # three poisoned batches
+    assert c["breaker_rejected"] >= 1            # fast-fail while open
+    # cooldown elapses, executable is healthy again: half-open probe
+    # closes the breaker and the stream resumes (seam passes through —
+    # all poison ordinals are long consumed)
+    time.sleep(0.06)
+    rid = svc.submit(AllocRequest(h2=np.ones(3)))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"
+    states = {b["state"] for b in svc.health()["breakers"].values()}
+    assert states == {"closed"}
+    log = svc.health()["breaker_transitions"]
+    assert ("n8/proposed/projected/sequential", "open", "half_open") in log
+    assert ("n8/proposed/projected/sequential", "half_open", "closed") in log
+
+
+def test_chaos_run_is_deterministic_in_accounting():
+    a = run_chaos(SCENARIOS["nan_storm"])
+    b = run_chaos(SCENARIOS["nan_storm"])
+    assert a.status_counts == b.status_counts
+    assert a.submitted == b.submitted
+    assert [r.rid for r in a.results] == [r.rid for r in b.results]

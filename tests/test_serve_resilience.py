@@ -1,0 +1,452 @@
+"""ISSUE-9 resilience layer: SLA admission, priority shedding, the
+degraded-retry ladder, circuit breaker transitions, watchdog, dispatch
+backoff, health() — plus the satellite fixes (honest reject latency,
+rid-sorted drain, bucket_for as single oversize source, warmup edge
+cases) and the baseline-parity guarantee (SLA mode with default
+priorities is bit-identical to the legacy blocking scheduler)."""
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro.launch.alloc_serve as alloc_serve
+from repro.core.stackelberg import GameConfig
+from repro.core.tracking import TRACE_COUNTS
+from repro.launch.alloc_serve import AllocationService, AllocRequest
+
+
+def _key(svc, nb, scheme="proposed", cfg=None):
+    cfg = cfg or GameConfig()
+    return (nb, scheme, cfg.dinkelbach_inner, cfg.sic_mode)
+
+
+def _reqs(k, seed=0, n_lo=1, n_hi=8, **kw):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(k):
+        n = int(rng.integers(n_lo, n_hi + 1))
+        out.append(AllocRequest(h2=rng.uniform(0.05, 2.0, n), seed=i, **kw))
+    return out
+
+
+def _poison(real):
+    def wrapped(*a, **kw):
+        out = real(*a, **kw)
+        return jax.tree_util.tree_map(
+            lambda x: jnp.full_like(x, jnp.nan)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x, out)
+    return wrapped
+
+
+# ---------------------------------------------------------------------------
+# per-request SLA
+# ---------------------------------------------------------------------------
+def test_admission_control_rejects_fast():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    svc._ewma[_key(svc, 8)] = 10.0          # pretend dispatches take 10 s
+    rid = svc.submit(AllocRequest(h2=np.ones(4), deadline_s=0.5))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "rejected"
+    assert "admission control" in res[rid].error
+    assert res[rid].latency_s > 0.0         # honest reject latency
+    assert svc.stats["admission_rejected"] == 1
+    # a generous deadline is admitted despite the same EWMA
+    rid2 = svc.submit(AllocRequest(h2=np.ones(4), deadline_s=100.0))
+    res2 = {r.rid: r for r in svc.drain()}
+    assert res2[rid2].status == "ok"
+
+
+def test_admission_skipped_until_ewma_seeded():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    rid = svc.submit(AllocRequest(h2=np.ones(4), deadline_s=5.0))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"          # no EWMA yet → admit
+    assert _key(svc, 8) in svc._ewma        # completion seeded it
+
+
+def test_priority_shedding_lowest_youngest_first():
+    svc = AllocationService(buckets=(8,), max_batch=4, max_queue=2)
+    rids = [svc.submit(AllocRequest(h2=np.ones(3), priority=p, seed=i))
+            for i, p in enumerate((0, 5, 0, 5))]
+    res = {r.rid: r for r in svc.drain()}
+    assert len(res) == 4                    # exactly once, shed included
+    assert res[rids[1]].status == "ok" and res[rids[3]].status == "ok"
+    assert res[rids[0]].status == "shed"    # low priority sheds ...
+    assert res[rids[2]].status == "shed"    # ... youngest-low first
+    shed = res[rids[2]]
+    assert "max_queue" in shed.error and shed.latency_s > 0.0
+    assert np.all(np.isnan(shed.p)) and shed.priority == 0
+    assert svc.stats["shed"] == 2
+
+
+def test_deadline_timeout_tagged_on_late_completion():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    real = svc._dispatch
+
+    def slow(*a, **kw):
+        out = real(*a, **kw)
+        time.sleep(0.08)                    # completion lands past deadline
+        return out
+
+    svc._dispatch = slow
+    rid = svc.submit(AllocRequest(h2=np.ones(4), deadline_s=0.05))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "timeout"
+    assert "deadline" in res[rid].error
+    assert res[rid].feasible                # arrays still usable
+    assert np.all(np.isfinite(res[rid].p))
+    assert svc.stats["timeout"] == 1
+
+
+def test_deadline_expired_in_queue():
+    svc = AllocationService(buckets=(8,), max_batch=4, max_queue=16)
+    rid = svc.submit(AllocRequest(h2=np.ones(3), deadline_s=1e-4))
+    time.sleep(0.01)                        # expires while queued
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "timeout"
+    assert "expired while queued" in res[rid].error
+    assert svc.stats["expired_in_queue"] == 1
+
+
+def test_high_priority_packed_first():
+    # max_batch=2 with 3 queued: the two high-priority requests must ride
+    # the first dispatch even though a low-priority request arrived first
+    svc = AllocationService(buckets=(8,), max_batch=2, max_queue=16)
+    lo = svc.submit(AllocRequest(h2=np.ones(3), priority=0))
+    hi1 = svc.submit(AllocRequest(h2=np.ones(3), priority=3))
+    hi2 = svc.submit(AllocRequest(h2=np.ones(3), priority=3))
+    res = {r.rid: r for r in svc.drain()}
+    assert all(res[r].status == "ok" for r in (lo, hi1, hi2))
+    h = svc.health()
+    assert set(h["latency_by_priority_ms"]) == {"0", "3"}
+
+
+# ---------------------------------------------------------------------------
+# degraded retry
+# ---------------------------------------------------------------------------
+def test_retry_ladder_relax_tmax_recovers():
+    # seed-3 n=5 draw: infeasible at t_max=0.55, feasible at 0.55*1.5
+    h2 = np.random.default_rng(3).uniform(0.2, 2.0, 5)
+    svc = AllocationService(buckets=(8,), max_batch=1)
+    rid = svc.submit(AllocRequest(h2=h2, cfg=GameConfig(t_max=0.55)))
+    res = {r.rid: r for r in svc.drain()}
+    r = res[rid]
+    assert r.status == "ok" and r.feasible
+    assert r.degradation == ("relax_tmax:1.5",)
+    assert r.scheme == "proposed"
+    assert svc.stats["retries"] == 1
+    assert svc.stats["degraded_ok"] == 1
+    assert svc.stats["infeasible"] == 0
+
+
+def test_retry_ladder_exhausts_to_infeasible():
+    h2 = np.random.default_rng(3).uniform(0.2, 2.0, 5)
+    svc = AllocationService(buckets=(8,), max_batch=1)
+    rid = svc.submit(AllocRequest(h2=h2, cfg=GameConfig(t_max=1e-4)))
+    res = {r.rid: r for r in svc.drain()}
+    r = res[rid]
+    assert r.status == "infeasible" and not r.feasible
+    assert r.degradation == ("relax_tmax:1.5", "fallback:oma")
+    assert r.scheme == "oma"                # final arrays from the fallback
+    assert "deadline" in r.error
+    assert svc.stats["retries"] == 2
+    assert svc.stats["infeasible"] == 1
+
+
+def test_allow_degraded_false_skips_ladder():
+    h2 = np.random.default_rng(3).uniform(0.2, 2.0, 5)
+    svc = AllocationService(buckets=(8,), max_batch=1)
+    rid = svc.submit(AllocRequest(h2=h2, cfg=GameConfig(t_max=0.55),
+                                  allow_degraded=False))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "infeasible"
+    assert res[rid].degradation == ()
+    assert svc.stats["retries"] == 0
+
+
+def test_random_scheme_earns_no_retries():
+    svc = AllocationService(buckets=(8,), max_batch=1)
+    rid = svc.submit(AllocRequest(h2=np.ones(3), scheme="random",
+                                  cfg=GameConfig(t_max=1e-6)))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "infeasible"
+    assert res[rid].degradation == ()
+    assert svc.stats["retries"] == 0
+
+
+def test_dispatch_backoff_recovers_from_transient_failure():
+    svc = AllocationService(buckets=(8,), max_batch=4,
+                            backoff_base_s=0.001)
+    real, calls = svc._dispatch, []
+
+    def flaky(*a, **kw):
+        calls.append(1)
+        if len(calls) <= 2:
+            raise RuntimeError("transient")
+        return real(*a, **kw)
+
+    svc._dispatch = flaky
+    rid = svc.submit(AllocRequest(h2=np.ones(4)))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"
+    assert svc.stats["dispatch_retries"] == 2
+    assert svc.stats["dispatch_failures"] == 0
+
+
+def test_dispatch_failure_exhausted_becomes_rejected():
+    svc = AllocationService(buckets=(8,), max_batch=4,
+                            dispatch_retries=1, backoff_base_s=0.001)
+
+    def dead(*a, **kw):
+        raise RuntimeError("chaos monkey ate the executable")
+
+    svc._dispatch = dead
+    rids = [svc.submit(r) for r in _reqs(3, seed=1)]
+    res = {r.rid: r for r in svc.drain()}
+    assert len(res) == 3                    # exactly once, never silent
+    for rid in rids:
+        assert res[rid].status == "rejected"
+        assert "dispatch failed after 2 attempts" in res[rid].error
+        assert "chaos monkey" in res[rid].error
+    assert svc.stats["dispatch_failures"] == 1
+    assert svc.stats["dispatch_retries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# containment: breaker + watchdog + non-finite outputs
+# ---------------------------------------------------------------------------
+def test_breaker_full_cycle_open_halfopen_closed():
+    svc = AllocationService(buckets=(8,), max_batch=1,
+                            breaker_threshold=2, breaker_cooldown_s=0.05)
+    real = svc._dispatch
+    svc._dispatch = _poison(real)
+    key = _key(svc, 8)
+    ks = svc._key_str(key)
+    # two consecutive poisoned batches trip the breaker OPEN
+    for r in _reqs(2, seed=2, n_lo=3, n_hi=3):
+        svc.submit(r)
+    res = svc.drain()
+    assert all(r.status == "rejected" for r in res)
+    assert all("non-finite allocation" in r.error for r in res)
+    assert svc._breakers[key].state == "open"
+    assert (ks, "closed", "open") in svc.breaker_log
+    # while open: fast-fail without dispatching
+    d0 = svc.stats["dispatches"]
+    rid = svc.submit(AllocRequest(h2=np.ones(3)))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "rejected"
+    assert "circuit breaker open" in res[rid].error
+    assert svc.stats["dispatches"] == d0    # no executable touched
+    assert svc.stats["breaker_rejected"] == 1
+    # cooldown elapses, executable healthy again → half-open probe closes
+    svc._dispatch = real
+    time.sleep(0.06)
+    rid = svc.submit(AllocRequest(h2=np.ones(3)))
+    assert svc._breakers[key].state in ("half_open", "closed")
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"
+    assert svc._breakers[key].state == "closed"
+    tail = [t for t in svc.breaker_log if t[0] == ks]
+    assert tail == [(ks, "closed", "open"), (ks, "open", "half_open"),
+                    (ks, "half_open", "closed")]
+
+
+def test_breaker_reopens_on_bad_halfopen_probe():
+    svc = AllocationService(buckets=(8,), max_batch=1,
+                            breaker_threshold=1, breaker_cooldown_s=0.01)
+    svc._dispatch = _poison(svc._dispatch)  # stays poisoned throughout
+    svc.submit(AllocRequest(h2=np.ones(3)))
+    svc.drain()
+    key = _key(svc, 8)
+    assert svc._breakers[key].state == "open"
+    time.sleep(0.02)
+    svc.submit(AllocRequest(h2=np.ones(3)))  # half-open probe, still bad
+    svc.drain()
+    assert svc._breakers[key].state == "open"
+    ks = svc._key_str(key)
+    assert (ks, "half_open", "open") in svc.breaker_log
+
+
+def test_breaker_isolated_per_key():
+    # poison only trips the (bucket, scheme) it ran on; other keys flow
+    svc = AllocationService(buckets=(8, 16), max_batch=1,
+                            breaker_threshold=1)
+    real = svc._dispatch
+    svc._dispatch = _poison(real)
+    svc.submit(AllocRequest(h2=np.ones(3)))          # n8/proposed poisoned
+    svc.drain()
+    assert svc._breakers[_key(svc, 8)].state == "open"
+    svc._dispatch = real
+    rid = svc.submit(AllocRequest(h2=np.ones(12)))   # n16 unaffected
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"
+    assert _key(svc, 16) not in svc._breakers or \
+        svc._breakers[_key(svc, 16)].state == "closed"
+
+
+def test_infeasible_batches_trip_breaker_only_when_opted_in():
+    h2 = np.random.default_rng(3).uniform(0.2, 2.0, 5)
+    bad_cfg = GameConfig(t_max=1e-9)        # infeasible beyond any relax
+    # default: infeasibility is a valid answer, breaker stays closed
+    svc = AllocationService(buckets=(8,), max_batch=1, breaker_threshold=2,
+                            degraded_retry=False)
+    for i in range(3):
+        svc.submit(AllocRequest(h2=h2, cfg=bad_cfg, seed=i))
+    res = svc.drain()
+    assert all(r.status == "infeasible" for r in res)
+    assert svc._breakers[_key(svc, 8)].state == "closed"
+    # opted in: a known-feasible deployment treats it as executable
+    # ill-health and trips after breaker_threshold consecutive batches
+    svc = AllocationService(buckets=(8,), max_batch=1, breaker_threshold=2,
+                            degraded_retry=False,
+                            breaker_on_infeasible=True)
+    for i in range(2):
+        svc.submit(AllocRequest(h2=h2, cfg=bad_cfg, seed=i))
+    svc.drain()
+    assert svc._breakers[_key(svc, 8)].state == "open"
+    rid = svc.submit(AllocRequest(h2=h2, cfg=bad_cfg))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "rejected"
+    assert "circuit breaker open" in res[rid].error
+
+
+def test_consecutive_fail_counter_resets_on_good_batch():
+    svc = AllocationService(buckets=(8,), max_batch=1, breaker_threshold=3)
+    real = svc._dispatch
+    key = _key(svc, 8)
+    for bad in (True, True, False, True, True):      # never 3 consecutive
+        svc._dispatch = _poison(real) if bad else real
+        svc.submit(AllocRequest(h2=np.ones(3)))
+        svc.drain()
+    assert svc._breakers[key].state == "closed"
+
+
+def test_watchdog_counts_slow_batches():
+    svc = AllocationService(buckets=(8,), max_batch=4, watchdog_s=1e-9)
+    rid = svc.submit(AllocRequest(h2=np.ones(4)))
+    res = {r.rid: r for r in svc.drain()}
+    assert res[rid].status == "ok"          # slow ≠ wrong: result delivered
+    assert svc.stats["watchdog_trips"] >= 1
+    assert svc._breakers[_key(svc, 8)].fails >= 1   # but health noticed
+
+
+def test_nonfinite_input_rejected_before_dispatch():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    rid = svc.submit(AllocRequest(h2=np.array([1.0, np.nan, 0.5])))
+    rid2 = svc.submit(AllocRequest(h2=np.array([np.inf, 0.5])))
+    res = {r.rid: r for r in svc.drain()}
+    for r in (rid, rid2):
+        assert res[r].status == "rejected"
+        assert "non-finite channel gains" in res[r].error
+    assert svc.stats["dispatches"] == 0
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+def test_health_snapshot_shape():
+    svc = AllocationService(buckets=(8,), max_batch=4, max_queue=16)
+    for r in _reqs(6, seed=4, priority=1):
+        svc.submit(r)
+    h = svc.health()
+    assert set(h) >= {"queued", "queued_total", "inflight", "breakers",
+                      "breaker_transitions", "ewma_dispatch_s",
+                      "counters", "latency_by_priority_ms"}
+    svc.drain()
+    h = svc.health()
+    assert h["queued_total"] == 0 and h["inflight"] == 0
+    assert h["counters"]["completed"] == 6
+    lat = h["latency_by_priority_ms"]["1"]
+    assert lat["n"] == 6 and 0 < lat["p50_ms"] <= lat["p99_ms"]
+    assert h["ewma_dispatch_s"]                  # seeded by completions
+
+
+# ---------------------------------------------------------------------------
+# satellites: honest latency, sorted drain, bucket_for dedup, warmup
+# ---------------------------------------------------------------------------
+def test_reject_latency_is_honest():
+    svc = AllocationService(buckets=(8,))
+    svc.submit(AllocRequest(h2=np.ones(99)))         # oversized
+    (r,) = svc.drain()
+    assert r.status == "rejected" and r.latency_s > 0.0
+
+
+def test_drain_sorted_by_rid():
+    # mixed buckets + a shed + a reject: completion order scrambles, the
+    # drain contract re-sorts
+    svc = AllocationService(buckets=(8, 16), max_batch=2, max_queue=8)
+    rids = []
+    for i, n in enumerate((12, 3, 99, 12, 3, 11)):
+        rids.append(svc.submit(AllocRequest(h2=np.ones(n), seed=i)))
+    res = svc.drain()
+    assert [r.rid for r in res] == sorted(rids)
+    assert len(res) == len(rids)
+
+
+def test_bucket_for_direct_call():
+    svc = AllocationService(buckets=(8, 16, 64))
+    assert svc.bucket_for(1) == 8
+    assert svc.bucket_for(8) == 8
+    assert svc.bucket_for(9) == 16
+    assert svc.bucket_for(64) == 64
+    with pytest.raises(ValueError, match="exceeds the largest bucket 64"):
+        svc.bucket_for(65)
+
+
+def test_oversize_submit_message_matches_bucket_for():
+    svc = AllocationService(buckets=(8,))
+    try:
+        svc.bucket_for(9)
+    except ValueError as e:
+        msg = str(e)
+    svc.submit(AllocRequest(h2=np.ones(9)))
+    (r,) = svc.drain()
+    assert r.error == msg                   # single source of truth
+
+
+def test_warmup_nondefault_schemes_no_leak():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    svc.warmup(schemes=("oma", "random"))
+    assert svc.drain() == []                # probes never surface
+    assert svc.stats["completed"] == 0
+    assert svc.stats.get("submitted", 0) == 0
+    assert not svc._ewma                    # compile time never seeds EWMA
+    # warmed pairs replay with zero retraces
+    base = TRACE_COUNTS["serve_allocation"]
+    rids = [svc.submit(AllocRequest(h2=np.ones(3), scheme=s, seed=i))
+            for i, s in enumerate(("oma", "random", "oma", "random"))]
+    res = {r.rid: r for r in svc.drain()}
+    assert TRACE_COUNTS["serve_allocation"] == base
+    assert all(res[r].status == "ok" for r in rids)
+
+
+# ---------------------------------------------------------------------------
+# baseline parity: the resilience layer must not perturb the happy path
+# ---------------------------------------------------------------------------
+def test_sla_mode_bit_identical_to_legacy_on_default_stream():
+    reqs = _reqs(10, seed=7, n_lo=1, n_hi=8)
+    legacy = AllocationService(buckets=(8,), max_batch=4)
+    sla = AllocationService(buckets=(8,), max_batch=4, max_queue=1000)
+    a = {r.rid: r for r in
+         [legacy.submit(q) for q in reqs] and legacy.drain()}
+    b = {r.rid: r for r in
+         [sla.submit(q) for q in reqs] and sla.drain()}
+    assert set(a) == set(b)
+    for rid in a:
+        assert a[rid].status == b[rid].status == "ok"
+        np.testing.assert_array_equal(a[rid].p, b[rid].p)
+        np.testing.assert_array_equal(a[rid].rates, b[rid].rates)
+        assert a[rid].t_total == b[rid].t_total
+        assert a[rid].degradation == b[rid].degradation == ()
+
+
+def test_default_result_fields_on_happy_path():
+    svc = AllocationService(buckets=(8,), max_batch=4)
+    rid = svc.submit(AllocRequest(h2=np.ones(4)))
+    res = {r.rid: r for r in svc.drain()}
+    r = res[rid]
+    assert (r.status, r.error, r.degradation) == ("ok", "", ())
+    assert r.priority == 0 and r.deadline_s is None
