@@ -32,7 +32,7 @@ from . import common  # noqa: F401  applies --devices/REPRO_FORCE_DEVICES
                       # (re-exec) before any suite initializes jax
 
 SUITES = ("fig4", "fig5", "fig6", "fig78", "fig9", "ablation", "kernels",
-          "equilibrium", "training", "robustness")
+          "equilibrium", "training", "robustness", "mechanism")
 
 
 def main() -> None:
@@ -77,6 +77,8 @@ def main() -> None:
                 from . import training_throughput as mod
             elif suite == "robustness":
                 from . import robustness_grid as mod
+            elif suite == "mechanism":
+                from . import mechanism_design as mod
             else:
                 from . import kernels_microbench as mod
             for name, us, derived in mod.run():

@@ -35,6 +35,15 @@ Tracked bench files and their gated metrics (higher is better):
         object must be true — a robustness headline (e.g. "the defended
         scheme stays within 5 pts of clean under the adaptive attacker")
         that stops holding fails the gate even if throughput is fine.
+  * ``BENCH_mechanism.json``
+      - ``grad_steps_per_sec``         — the jitted value_and_grad step
+        through the solved Stackelberg equilibria (the IFT custom_vjp
+        path, ``benchmarks/mechanism_design.py``), tolerance-declared at
+        −35%;
+      - plus the CLAIMS gate: learned knobs must beat the hand-picked
+        objective, IFT gradients must be finite, the tuning run must
+        compile once, and the learned mechanism's real-engine accuracy
+        must stay within 5 pts of hand-picked.
     (The host-loop baseline tiers are recorded but not gated — they are
     the slow references, and their host-side dispatch overhead is the
     noisiest number in the file.)
@@ -133,11 +142,19 @@ def _robustness_metrics(doc) -> dict:
     return out
 
 
+def _mechanism_metrics(doc) -> dict:
+    out = {}
+    if doc.get("grad_steps_per_sec") is not None:
+        out["grad_steps_per_sec"] = float(doc["grad_steps_per_sec"])
+    return out
+
+
 BENCHES = (
     ("BENCH_equilibrium.json", _equilibrium_metrics),
     ("BENCH_training.json", _training_metrics),
     ("BENCH_serve.json", _serve_metrics),
     ("BENCH_robustness.json", _robustness_metrics),
+    ("BENCH_mechanism.json", _mechanism_metrics),
 )
 
 # sentinel for "file exists but is unreadable" — distinct from None

@@ -15,7 +15,13 @@ from .reputation import (BENCHMARK_WEIGHTS, PROPOSED_WEIGHTS, ReputationState,
                          init_reputation, select_clients)
 from .reputation import reputation as reputation_score
 from . import reputation  # keep the submodule accessible (not the function)
-from .fl_round import allocate, allocate_batched, sweep_allocation
+from .fl_round import allocate, allocate_batched, fl_ops, sweep_allocation
+from .implicit import (FixedPointStatics, equilibrium_implicit,
+                       fixed_point_step)
+from .mechanism import (MechanismContext, MechanismParams, MechanismStatics,
+                        init_params, mechanism_objective, mechanism_step,
+                        params_to_knobs, synthetic_context, to_fl_config,
+                        to_fl_ops, tune_mechanism)
 from .stackelberg import (TRACE_COUNTS, Allocation, GameConfig, GamePhysics,
                           reset_trace_counts)
 from .stackelberg import (batched_equilibrium, batched_oma_allocation,
@@ -51,4 +57,9 @@ __all__ = [
     "sweep_oma_tdma_allocation", "random_allocation",
     "batched_random_allocation", "sweep_random_allocation",
     "wo_dt_allocation", "allocate", "allocate_batched", "sweep_allocation",
+    "fl_ops", "FixedPointStatics", "equilibrium_implicit",
+    "fixed_point_step", "MechanismContext", "MechanismParams",
+    "MechanismStatics", "init_params", "mechanism_objective",
+    "mechanism_step", "params_to_knobs", "synthetic_context", "to_fl_config",
+    "to_fl_ops", "tune_mechanism",
 ]

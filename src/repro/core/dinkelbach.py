@@ -52,13 +52,41 @@ def _rate(p, f_eff, bandwidth):
 
 
 def _p_floor(d, g, f_eff, bandwidth, p_min):
-    """Smallest power meeting the rate floor R ≥ d/G."""
-    need = (2.0 ** (d / (jnp.maximum(g, 1e-9) * bandwidth)) - 1.0) / f_eff
+    """Smallest power meeting the rate floor R ≥ d/G.
+
+    Grad-safe closed form: the naive ``(2**expo − 1) / f_eff`` is forward-
+    correct (the caller clamps with ``min(·, p_max)``) but reverse-mode
+    poison — ``2**expo`` overflows to inf for a starved deadline and
+    ``1/f_eff`` is inf on a dead (masked) lane, and a ``where`` that merely
+    *selects away* an inf branch still multiplies it by a zero cotangent
+    (0·inf = NaN).  Both denominators are therefore replaced by safe values
+    inside the untaken branch (double-``where``) and the exponent is
+    saturated; every rewrite is value-identical after the caller's clamp."""
+    expo = d / (jnp.maximum(g, 1e-9) * bandwidth)
+    big = expo > 60.0            # 2**60 already exceeds any reachable p_max
+    f_ok = f_eff > 1e-30
+    f_safe = jnp.where(f_ok, f_eff, 1.0)
+    need_raw = (2.0 ** jnp.where(big, 0.0, expo) - 1.0) / f_safe
+    need = jnp.where(f_ok & ~big, need_raw, 1e30)
     return jnp.maximum(p_min, need)
 
 
 def _inner_projected(q, d, f_eff, bandwidth, lo, hi):
-    p0 = bandwidth / (LN2 * jnp.maximum(q, 1e-30) * d) - 1.0 / f_eff
+    """Concave stationary point projected on [lo, hi], grad-safe.
+
+    Double-``where`` on both divisions: the cold-start lane (q = 0) and the
+    dead lane (f_eff = 0) must not evaluate 1/0 even in the branch the
+    ``where`` discards, or reverse-mode emits NaN cotangents.  Forward
+    values are unchanged — q→0 clipped to ``hi`` exactly as the old huge
+    stationary point was, and a dead lane ends at p_max either way
+    (its ``lo`` is already p_max via the rate-floor clamp)."""
+    den = LN2 * q * d
+    den_ok = den > 1e-20
+    f_ok = f_eff > 1e-30
+    den_safe = jnp.where(den_ok, den, 1.0)
+    f_safe = jnp.where(f_ok, f_eff, 1.0)
+    inv_f = jnp.where(f_ok, 1.0 / f_safe, 0.0)
+    p0 = jnp.where(den_ok, bandwidth / den_safe - inv_f, hi)
     return jnp.clip(p0, lo, hi)
 
 

@@ -447,6 +447,30 @@ def _fl_ops(fl: FLConfig, dtype) -> Dict:
     }
 
 
+# public alias: the FL knob dict IS a differentiable pytree — every entry
+# is a traced array operand of the round body, so callers (the mechanism
+# layer's ``to_fl_ops``) may pass (possibly grad-carrying) replacements
+# through the ``ops_override`` argument of the training entry points.
+fl_ops = _fl_ops
+
+
+def _merge_ops(ops: Dict, ops_override) -> Dict:
+    """Overlay caller-supplied knob arrays on the config-derived dict.
+    Keys must already exist (typos must not silently vanish); values are
+    cast to the engine dtype so an f64 mechanism run still hits the f32
+    executable."""
+    if ops_override is None:
+        return ops
+    unknown = set(ops_override) - set(ops)
+    if unknown:
+        raise ValueError(f"ops_override keys {sorted(unknown)} are not FL "
+                         f"knobs; expected a subset of {sorted(ops)}")
+    merged = dict(ops)
+    for k, v in ops_override.items():
+        merged[k] = jnp.asarray(v, ops[k].dtype)
+    return merged
+
+
 def _canon_state(state: FLState) -> FLState:
     """Fixed-dtype scan carry: a weak-typed python-int ``round`` would
     retrace the scan (or fail the carry fixpoint)."""
@@ -556,7 +580,7 @@ def _batched_training_jit(phys, states, data, ops, fops, *, rounds,
 
 def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
                       game: GameConfig, logits_fn: Callable, rounds: int,
-                      faults=None):
+                      faults=None, ops_override=None):
     """The whole R-round trajectory as ONE ``lax.scan`` dispatch of one
     compiled program.
 
@@ -572,8 +596,14 @@ def run_training_scan(state: FLState, data: FedData, fl: FLConfig,
     see ``repro.core.faults``.  Its presence is the only new structural
     compile flag; every fault knob is a traced operand, so a scenario
     sweep shares the executable.
+
+    ``ops_override`` (dict, a subset of the ``fl_ops`` keys) replaces
+    individual traced knobs with caller-supplied arrays — the mechanism
+    layer's evaluate-learned-knobs path (``mechanism.to_fl_ops``); same
+    executable, the override is just different operand values.
     """
     state, phys, ops, fops = _prep(state, fl, game, faults)
+    ops = _merge_ops(ops, ops_override)
     return _training_scan_jit(phys, state, data, ops, fops, rounds=rounds,
                               **_static_kwargs(fl, game, logits_fn))
 
@@ -752,7 +782,7 @@ def _sweep_fault_ops(faults, c: int, dtype) -> FaultOps | None:
 
 def sweep_training(states: FLState, data: FedData, fls, games,
                    logits_fn: Callable, rounds: int, faults=None,
-                   data_axis: str = "seed"):
+                   data_axis: str = "seed", ops_override=None):
     """A whole config-grid of training runs — C (``FLConfig``,
     ``GameConfig``) points × S seeds × R rounds — as ONE XLA dispatch of
     one executable (the Fig. 5/6/7/8 workload).
@@ -821,6 +851,8 @@ def sweep_training(states: FLState, data: FedData, fls, games,
     dtype = jnp.result_type(jnp.asarray(states.distances))
     phys = stack_physics(games, dtype)            # [C] leaves
     ops = stack_fl_ops(fls, dtype)                # [C] / [C, 3] leaves
+    # knob override (see run_training_scan): leaves must carry the [C] axis
+    ops = _merge_ops(ops, ops_override)
     fops = _sweep_fault_ops(faults, c, dtype)     # [C] leaves (or None)
     s = jax.tree_util.tree_leaves(states)[0].shape[0]
 

@@ -68,9 +68,15 @@ def reputation(state: ReputationState, d_sizes, epsilon: float = 0.0,
 def select_clients(state: ReputationState, d_sizes, n: int,
                    epsilon: float = 0.0,
                    weights: Tuple[float, float, float] = PROPOSED_WEIGHTS):
-    """Top-N by reputation (descending). Returns indices [n]."""
+    """Top-N by reputation (descending). Returns indices [n].
+
+    Ties break toward the lower client index (``stable=True``): equal
+    reputations are common at init (identical priors), and an unpinned
+    tie-break would make the selected set depend on backend sort
+    internals — mechanism-learning gradients need the selection to be a
+    deterministic function of Z."""
     z = reputation(state, d_sizes, epsilon, weights)
-    return jnp.argsort(-z)[:n], z
+    return jnp.argsort(-z, stable=True)[:n], z
 
 
 def update_staleness(state: ReputationState, selected_mask) -> ReputationState:
@@ -93,6 +99,6 @@ def update_interactions(state: ReputationState, selected_idx,
     if count_mask is not None:
         pos = pos & count_mask
         neg = neg & count_mask
-    pi = state.pi_count.at[selected_idx].add(pos.astype(jnp.float32))
-    ni = state.ni_count.at[selected_idx].add(neg.astype(jnp.float32))
+    pi = state.pi_count.at[selected_idx].add(pos.astype(state.pi_count.dtype))
+    ni = state.ni_count.at[selected_idx].add(neg.astype(state.ni_count.dtype))
     return ReputationState(ms=state.ms, pi_count=pi, ni_count=ni)

@@ -70,6 +70,18 @@ through every engine tier):
                             interpret mode (CPU validation of the kernel);
   * ``blocked_pallas``    — Jacobi sweeps, compiled Pallas suffix kernel
                             (TPU backends).
+
+Differentiability contract (the IFT path, ``core.implicit``): BOTH
+families converge to the SAME fixed point — the dependency ``p_n ← {p_j :
+j > n}`` is strictly triangular — so reverse-mode gradients through the
+equilibrium never differentiate these solvers at all.  The ``custom_vjp``
+linearizes ONE differentiable Algorithm-2 sweep at the solution instead,
+and that sweep always takes ``suffix_interference(..., mode="ref")``: the
+flip-cumsum closed form is the designated grad-safe path, while the
+scan/while_loop/Pallas engines here remain forward-value-only (their
+1e-6-clamped update rules would need the double-``where`` treatment of
+``dinkelbach._inner_projected`` if anyone ever backprops them directly —
+don't; route gradients through ``equilibrium_implicit``).
 """
 from __future__ import annotations
 

@@ -187,7 +187,15 @@ def local_compute_energy(c, v, D, f, tau=TAU):
 
 
 def dt_compute_latency(c, d_hat, alpha, f_server):
-    return c * d_hat / (jnp.maximum(alpha, 1e-12) * f_server)       # Eq. (7)
+    """Eq. (7), grad-safe: the α = 0 lane (masked client, zero DT load)
+    must not divide by the 1e-12 clamp inside the live branch — reverse
+    mode would scale its cotangent by 1e12 and, composed with an inf
+    upstream, NaN.  Double-``where`` keeps the forward value bit-identical
+    to ``load / (max(α, 1e-12)·f_server)`` in both regimes."""
+    load = c * d_hat
+    ok = alpha > 1e-12
+    return jnp.where(ok, load / (jnp.where(ok, alpha, 1.0) * f_server),
+                     load * 1e12 / f_server)
 
 
 # ---------------------------------------------------------------------------
@@ -199,11 +207,24 @@ def follower_alpha(c, d_hat, t_total, f_server) -> Tuple[jax.Array, jax.Array]:
     The Eq.-26 denominator is guarded: a degenerate cell with zero DT load
     AND zero round latency (every client masked out in a padded serving
     bucket) is 0/0 without the floor, and the NaN would leak into
-    ``t_dt``/latency of that lane."""
+    ``t_dt``/latency of that lane.
+
+    Both guards are double-``where`` rather than ``max(·, 1e-12)``: the
+    clamp is forward-equivalent (``load·1e12`` IS ``load / 1e-12``) but
+    reverse-mode through the clamped branch multiplies cotangents by 1e12
+    and — through the branch a ``where`` upstream discards — turns any
+    inf into NaN.  With the safe denominator in the untaken branch every
+    cotangent stays finite (tests/test_grad_edges.py)."""
     load = c * d_hat                                # CPU cycles per client
-    alpha_case1 = load / jnp.maximum(t_total * f_server, 1e-12)   # Eq. (26)
+    den1 = t_total * f_server
+    den1_ok = den1 > 1e-12
+    alpha_case1 = jnp.where(                                      # Eq. (26)
+        den1_ok, load / jnp.where(den1_ok, den1, 1.0), load * 1e12)
     saturated = jnp.sum(alpha_case1) > 1.0
-    alpha_case2 = load / jnp.maximum(jnp.sum(load), 1e-12)   # Eq. (29)
+    den2 = jnp.sum(load)
+    den2_ok = den2 > 1e-12
+    alpha_case2 = jnp.where(                                      # Eq. (29)
+        den2_ok, load / jnp.where(den2_ok, den2, 1.0), load * 1e12)
     alpha = jnp.where(saturated, alpha_case2, alpha_case1)
     t_s = jnp.where(saturated, jnp.sum(load) / f_server, t_total)
     return alpha, t_s

@@ -62,6 +62,62 @@ def test_selection_staleness_rotation():
     assert seen == set(range(6))   # MS term guarantees coverage
 
 
+def test_selection_tie_break_is_lowest_index():
+    """Equal reputations (the init-state norm: identical priors, equal
+    data) must select the LOWEST indices — the tie-break is part of the
+    selection contract, not a backend sort accident."""
+    state = rep.init_reputation(8)
+    d = jnp.full((8,), 1000.0)
+    sel, z = rep.select_clients(state, d, 3)
+    assert bool(jnp.all(z == z[0]))          # genuinely tied
+    assert sel.tolist() == [0, 1, 2]
+    # a single strictly-better client still wins; ties fill the rest
+    # (init PI ratio is already 1.0, so demote everyone except client 5)
+    state2 = rep.init_reputation(8)
+    state2.ni_count = jnp.ones((8,)).at[5].set(0.0)
+    sel2, z2 = rep.select_clients(state2, d, 3)
+    assert float(z2[5]) > float(z2[0])
+    assert sel2.tolist() == [5, 0, 1]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_update_interactions_preserves_counter_dtype(dtype):
+    """Integer (or any non-default) counter dtypes must survive the
+    scatter-add: the bool verdict mask is cast to the counter dtype, not
+    the other way round (pre-fix, int counters were silently promoted —
+    or the add rejected — depending on jax version)."""
+    state = rep.ReputationState(ms=jnp.ones((3,)),
+                                pi_count=jnp.ones((3,), dtype),
+                                ni_count=jnp.zeros((3,), dtype))
+    out = rep.update_interactions(state, jnp.array([0, 2]),
+                                  jnp.array([True, False]))
+    assert out.pi_count.dtype == dtype
+    assert out.ni_count.dtype == dtype
+    assert out.pi_count.tolist() == [2, 1, 1]
+    assert out.ni_count.tolist() == [0, 0, 1]
+    # count_mask gating keeps dtype too and records nothing when masked
+    out2 = rep.update_interactions(state, jnp.array([0, 2]),
+                                   jnp.array([True, False]),
+                                   count_mask=jnp.array([False, False]))
+    assert out2.pi_count.dtype == dtype
+    assert out2.pi_count.tolist() == [1, 1, 1]
+    assert out2.ni_count.tolist() == [0, 0, 0]
+
+
+def test_reputation_accepts_traced_weights():
+    """Eq. 16 is linear in ξ — the mechanism layer differentiates through
+    the weights, so ``reputation`` must accept a traced weight vector."""
+    state = rep.init_reputation(4)
+    d = jnp.linspace(500.0, 2000.0, 4)
+
+    def z_sum(w):
+        return jnp.sum(rep.reputation(state, d, 0.0, (w[0], w[1], w[2])))
+
+    g = jax.grad(z_sum)(jnp.array([0.3, 0.5, 0.2]))
+    assert bool(jnp.all(jnp.isfinite(g)))
+    assert float(g[1]) == pytest.approx(1.0)   # Σ MS̄ = 1 exactly
+
+
 @given(st.integers(2, 8), st.integers(0, 3))
 @settings(max_examples=20, deadline=None)
 def test_weights_bound_reputation(n, seed):
